@@ -1,0 +1,20 @@
+"""Paper Figure 6: clustering wall time, flat (FM) vs TopDown (TD).
+Flat grows superlinearly with k; TopDown is orders of magnitude faster."""
+
+from benchmarks.common import corpus_and_log, row, timed
+from repro.core.seclud import SecludPipeline
+
+
+def run(quick: bool = True):
+    n_docs = 8000 if quick else 32000
+    ks = (16, 64, 128) if quick else (16, 64, 256, 1024)
+    corpus, log = corpus_and_log("wiki", n_docs)
+    pipe = SecludPipeline(tc=2000, doc_grained_below=512)
+    rows = []
+    for algo in ("flat", "topdown"):
+        for k in ks:
+            if algo == "flat" and k > 64 and quick:
+                continue
+            _, t = timed(pipe.fit, corpus, k, algo=algo, log=log, repeats=1)
+            rows.append(row(f"cluster_time/{algo}/k{k}", t, f"n={n_docs}"))
+    return rows

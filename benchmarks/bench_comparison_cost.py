@@ -1,0 +1,28 @@
+"""Paper Appendix B / Figure 9: theoretical speedup under the
+comparison-based intersection cost model Phi(x,y)=x*log(y/x) vs the
+Lookup model Phi=min. The paper finds the comparison-based model predicts
+even larger speedups from the same clustering."""
+
+from benchmarks.common import corpus_and_log, row
+from repro.core.objective import query_set_cost
+from repro.core.seclud import SecludPipeline
+
+
+def run(quick: bool = True):
+    n_docs = 10000 if quick else 40000
+    corpus, log = corpus_and_log("forum", n_docs)
+    pipe = SecludPipeline(tc=3000, doc_grained_below=512)
+    res = pipe.fit(corpus, 128, algo="topdown", log=log)
+    q = log.queries[:400]
+    rows = []
+    for model in ("lookup", "comparison", "binary_search", "merge"):
+        base = query_set_cost(corpus, None, 1, q, model=model)
+        clus = query_set_cost(corpus, res.assign, res.k, q, model=model)
+        rows.append(
+            row(
+                f"cost_model/{model}",
+                0.0,
+                f"S_T={base / max(clus, 1e-9):.2f}",
+            )
+        )
+    return rows

@@ -1,0 +1,30 @@
+"""Paper Tables 1-2 + Figure 1: corpus/log statistics and the Zipf shape
+of term query-probabilities."""
+
+import numpy as np
+
+from benchmarks.common import corpus_and_log, row
+from repro.data.corpus import corpus_stats
+from repro.data.query_log import term_probabilities
+from repro.index.build import build_index
+
+
+def run(quick: bool = True):
+    rows = []
+    sizes = {"gov2": 8000, "gov2s": 30000, "wiki": 10000, "forum": 12000}
+    if not quick:
+        sizes = {k: v * 4 for k, v in sizes.items()}
+    for name, n in sizes.items():
+        corpus, log = corpus_and_log(name, n)
+        st = corpus_stats(corpus)
+        idx = build_index(corpus)
+        st["index_MB"] = round(idx.size_bytes() / 2**20, 1)
+        st.update(log.stats())
+        rows.append(row(f"datasets/{name}", 0.0, str(st).replace(",", ";")))
+        # Fig 1: Zipf check — rank/probability log-log slope in [-1.5, -0.4]
+        p = term_probabilities(corpus.n_terms, log=log)
+        nz = np.sort(p[p > 0])[::-1][:2000]
+        ranks = np.arange(1, len(nz) + 1)
+        slope = np.polyfit(np.log(ranks), np.log(nz), 1)[0]
+        rows.append(row(f"zipf_slope/{name}", 0.0, f"slope={slope:.2f}"))
+    return rows

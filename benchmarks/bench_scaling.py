@@ -1,0 +1,23 @@
+"""Paper Figure 4: speedups vs number of documents |D| at fixed k."""
+
+from benchmarks.common import corpus_and_log, row
+from repro.core.seclud import SecludPipeline
+
+
+def run(quick: bool = True):
+    sizes = (3000, 8000, 16000) if quick else (8000, 32000, 64000, 128000)
+    k = 64 if quick else 256
+    rows = []
+    pipe = SecludPipeline(tc=3000, doc_grained_below=512)
+    for n in sizes:
+        corpus, log = corpus_and_log("gov2s", n)
+        res = pipe.fit(corpus, k, algo="topdown", log=log)
+        ev = pipe.evaluate(corpus, res, log, max_queries=300)
+        rows.append(
+            row(
+                f"scaling/gov2s/n{n}",
+                res.cluster_time_s,
+                f"S_T={ev['S_T']:.2f};S_C={ev['S_C']:.2f};S_R={ev['S_R']:.2f}",
+            )
+        )
+    return rows

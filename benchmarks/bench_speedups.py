@@ -1,0 +1,31 @@
+"""Paper Figures 2, 3 & 5: speedups S_T / S_C / S_R vs number of
+clusters k, for flat-multilevel (FM) and TopDown (TD) clustering."""
+
+from benchmarks.common import corpus_and_log, row, timed
+from repro.core.seclud import SecludPipeline
+
+
+def run(quick: bool = True, corpus_name: str = "forum"):
+    n_docs = 12000 if quick else 48000
+    ks = (16, 64, 256) if quick else (16, 64, 256, 1024)
+    n_eval = 300 if quick else 1000
+    corpus, log = corpus_and_log(corpus_name, n_docs)
+    pipe = SecludPipeline(tc=3000 if quick else 10000, doc_grained_below=512)
+    rows = []
+    for algo in ("topdown", "flat"):
+        for k in ks:
+            if algo == "flat" and k > 256:
+                continue  # paper Fig 6: flat is superlinear in k
+            res, t_fit = timed(
+                pipe.fit, corpus, k, algo=algo, log=log, repeats=1
+            )
+            ev = pipe.evaluate(corpus, res, log, max_queries=n_eval)
+            rows.append(
+                row(
+                    f"speedups/{corpus_name}/{algo}/k{k}",
+                    t_fit,
+                    f"S_T={ev['S_T']:.2f};S_C={ev['S_C']:.2f};"
+                    f"S_R={ev['S_R']:.2f};k_actual={res.k}",
+                )
+            )
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Figure 7: effect of the frequent-term cutoff TC on speedup.
+The paper finds TC=10k suffices for GOV2; we sweep TC on our corpus."""
+
+from benchmarks.common import corpus_and_log, row
+from repro.core.seclud import SecludPipeline
+
+
+def run(quick: bool = True):
+    n_docs = 10000 if quick else 40000
+    tcs = (250, 1000, 4000) if quick else (500, 2000, 10000, 50000)
+    k = 64 if quick else 256
+    corpus, log = corpus_and_log("forum", n_docs)
+    rows = []
+    for tc in tcs:
+        pipe = SecludPipeline(tc=tc, doc_grained_below=512)
+        res = pipe.fit(corpus, k, algo="topdown", log=log)
+        ev = pipe.evaluate(corpus, res, log, max_queries=300)
+        rows.append(
+            row(
+                f"tc_sweep/tc{tc}",
+                res.cluster_time_s,
+                f"S_T={ev['S_T']:.2f};S_C={ev['S_C']:.2f};S_R={ev['S_R']:.2f}",
+            )
+        )
+    return rows

@@ -1,0 +1,37 @@
+"""Shared corpus/log construction + timing helpers for the benchmarks."""
+
+import functools
+import time
+
+import numpy as np
+
+from repro.data.corpus import CorpusSpec, synth_corpus
+from repro.data.query_log import synth_query_log
+
+
+@functools.lru_cache(maxsize=8)
+def corpus_and_log(name: str, n_docs: int, n_queries: int = 2000, seed: int = 0):
+    spec = {
+        "gov2": CorpusSpec.gov2_like,
+        "gov2s": CorpusSpec.gov2s_like,
+        "wiki": CorpusSpec.wiki_like,
+        "forum": CorpusSpec.forum_like,
+    }[name](n_docs=n_docs, seed=seed)
+    corpus = synth_corpus(spec)
+    log = synth_query_log(corpus, n_queries=n_queries, co_topic=0.6, seed=seed + 1)
+    return corpus, log
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, seconds) — median of repeats."""
+    ts = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return out, float(np.median(ts))
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

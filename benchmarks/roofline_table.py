@@ -1,0 +1,46 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline table."""
+
+import json
+import os
+
+
+def render(paths=("dryrun_single.json", "dryrun_multi.json")) -> str:
+    rows = []
+    for p in paths:
+        if os.path.exists(p):
+            rows += json.load(open(p))
+    if not rows:
+        return "(no dry-run results found — run repro.launch.dryrun first)\n"
+    hdr = (
+        "| arch | shape | mesh | status | peak GiB/chip | compute ms | "
+        "memory ms | collective ms | dominant | useful | roofline |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "OK":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+                f"| — | — | — | — | — | — | {r.get('reason', r.get('error', ''))[:60]} |\n"
+            )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+            f"| {r['peak_memory_per_chip'] / 2**30:.1f} "
+            f"| {r['compute_s'] * 1e3:.1f} | {r['memory_s'] * 1e3:.1f} "
+            f"| {r['collective_s'] * 1e3:.2f} | {r['dominant']} "
+            f"| {r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.2f} |\n"
+        )
+    return "".join(out)
+
+
+def run(quick: bool = True):
+    from benchmarks.common import row
+
+    txt = render()
+    n = txt.count("| OK")
+    return [row("roofline/cells_ok", 0.0, f"ok={n}")]
+
+
+if __name__ == "__main__":
+    print(render())

@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick sizes
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale-ish
+  PYTHONPATH=src python -m benchmarks.run --only speedups
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        bench_cluster_time,
+        bench_comparison_cost,
+        bench_compression,
+        bench_datasets,
+        bench_kernels,
+        bench_scaling,
+        bench_speedups,
+        bench_tc,
+        roofline_table,
+    )
+
+    suites = {
+        "datasets": bench_datasets,
+        "speedups": bench_speedups,
+        "scaling": bench_scaling,
+        "cluster_time": bench_cluster_time,
+        "tc": bench_tc,
+        "compression": bench_compression,
+        "comparison_cost": bench_comparison_cost,
+        "kernels": bench_kernels,
+        "roofline": roofline_table,
+    }
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, mod in suites.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for r in mod.run(quick=quick):
+                print(r, flush=True)
+        except Exception as e:  # pragma: no cover
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+    print(f"# total {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

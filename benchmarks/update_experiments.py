@@ -1,0 +1,22 @@
+"""Inject the generated roofline table into EXPERIMENTS.md."""
+
+import re
+
+from benchmarks.roofline_table import render
+
+
+def main() -> None:
+    table = render()
+    md = open("EXPERIMENTS.md").read()
+    md = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |\Z)",
+        "<!-- ROOFLINE_TABLE -->\n\n" + table + "\n",
+        md,
+        flags=re.S,
+    ) if "<!-- ROOFLINE_TABLE -->" in md else md
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md roofline table updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end LM training driver (deliverable b): a small transformer on
+the synthetic token pipeline, with checkpointing, restart-resume and the
+fault-tolerant Trainer loop.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~10M params
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --full          # ~100M params
+
+Kill it mid-run and start again: it resumes from the latest checkpoint at
+the exact batch it left off (counter-based pipeline).
+"""
+
+import argparse
+
+import jax
+
+from repro.data.pipeline import TokenPipeline
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true", help="~100M params")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = T.LMConfig(
+            name="demo-100m", n_layers=16, d_model=640, n_heads=10,
+            n_kv_heads=10, head_dim=64, d_ff=2560, vocab=16384,
+            dtype="float32", loss_chunk=64,
+        )
+        seq, batch = 256, 8
+    else:
+        cfg = T.LMConfig(
+            name="demo-10m", n_layers=6, d_model=256, n_heads=4,
+            n_kv_heads=4, head_dim=64, d_ff=1024, vocab=8192,
+            dtype="float32", loss_chunk=64,
+        )
+        seq, batch = 128, 8
+    print(f"model {cfg.name}: {cfg.n_params() / 1e6:.1f}M params")
+
+    pipe = TokenPipeline(
+        vocab_size=cfg.vocab, seq_len=seq, batch_per_shard=batch, seed=0
+    )
+    trainer = Trainer(
+        loss_fn=lambda p, b: T.loss_fn(p, cfg, b),
+        init_params_fn=lambda k: T.init(cfg, k),
+        pipeline=pipe,
+        cfg=TrainerConfig(
+            total_steps=args.steps, ckpt_every=50, log_every=10,
+            ckpt_dir=args.ckpt_dir,
+        ),
+        opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+    )
+    params, _ = trainer.run()
+    first = trainer.history[0][1] if trainer.history else float("nan")
+    last = trainer.history[-1][1] if trainer.history else float("nan")
+    print(f"loss: {first:.3f} -> {last:.3f} over {len(trainer.history)} steps")
+
+    # Greedy decode a few tokens as a smoke of the serving path.
+    import jax.numpy as jnp
+
+    cache = T.init_cache(cfg, 1, 64)
+    prompt = jnp.asarray([[5, 17, 42, 7]], dtype=jnp.int32)
+    logits, cache = T.prefill(params, cfg, prompt, cache)
+    toks = []
+    for _ in range(8):
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        toks.append(int(nxt[0, 0]))
+        logits, cache = T.decode_step(params, cfg, nxt, cache)
+    print("greedy continuation:", toks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Architecture configs (--arch <id>) and the cell matrix.
+
+One module per assigned architecture with the exact public-literature
+config, plus the paper's own SeCluD configs.  ``registry.get_arch(name)``
+returns an ArchSpec; ``ArchSpec.cells`` maps shape names to Cell
+descriptors (kind of step, batch, per-shape config overrides, skip
+reasons).
+"""
+
+from repro.configs.base import ArchSpec, Cell
+from repro.configs.registry import ARCH_NAMES, get_arch
+
+__all__ = ["ArchSpec", "Cell", "ARCH_NAMES", "get_arch"]

@@ -1,0 +1,24 @@
+"""--arch registry. Lazy imports keep ``import repro.configs`` light."""
+
+import importlib
+
+_MODULES = {
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "pna": "repro.configs.pna",
+    "dien": "repro.configs.dien",
+    "mind": "repro.configs.mind",
+    "dcn-v2": "repro.configs.dcn_v2",
+    "bert4rec": "repro.configs.bert4rec",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_arch(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[name]).spec()

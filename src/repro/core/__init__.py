@@ -1,0 +1,54 @@
+"""SeCluD core — the paper's primary contribution.
+
+Search with Clustered Documents (Dimond & Sanders): cluster documents so
+conjunctive posting-list intersections get cheaper, losslessly.
+
+* ``objective``     — the query-cost objective ψ (Eq. 2), δ⁺/δ⁻ lookup
+                      tables, frequent-term restriction (TC cutoff)
+* ``kmeans``        — flat K-means on ψ with round-based and
+                      document-grained update modes
+* ``multilevel``    — ε-sampling multilevel initialization
+* ``topdown``       — hierarchical TopDown splitting (χ splitting factor)
+* ``cluster_index`` — two-level cluster index (query speedup S_C)
+* ``reorder``       — cluster-contiguous renumbering (query speedup S_R)
+* ``seclud``        — SecludPipeline: fit + query + speedup report
+* ``jax_ops``       — jit'd device versions of the hot ops (tables,
+                      scores) used by the distributed implementation
+"""
+
+from repro.core.objective import (
+    FrequentTermView,
+    frequent_term_view,
+    cluster_counts,
+    psi_from_counts,
+    delta_add_tables,
+    delta_remove_tables,
+    assignment_scores,
+    query_set_cost,
+)
+from repro.core.kmeans import kmeans, KMeansResult
+from repro.core.multilevel import multilevel_cluster
+from repro.core.topdown import topdown_cluster
+from repro.core.cluster_index import ClusterIndex, build_cluster_index
+from repro.core.reorder import reorder_permutation
+from repro.core.seclud import SecludPipeline, SecludResult
+
+__all__ = [
+    "FrequentTermView",
+    "frequent_term_view",
+    "cluster_counts",
+    "psi_from_counts",
+    "delta_add_tables",
+    "delta_remove_tables",
+    "assignment_scores",
+    "query_set_cost",
+    "kmeans",
+    "KMeansResult",
+    "multilevel_cluster",
+    "topdown_cluster",
+    "ClusterIndex",
+    "build_cluster_index",
+    "reorder_permutation",
+    "SecludPipeline",
+    "SecludResult",
+]

@@ -1,0 +1,137 @@
+"""Device (JAX) versions of the clustering hot ops.
+
+The host driver (kmeans.py) uses numpy/scipy — right for a recursion-heavy
+CPU workload.  These jit'd equivalents are the TPU path: they are used by
+the distributed clustering implementation (``repro.dist.cluster_dist``,
+documents sharded over the mesh, counts replicated — exactly the paper's
+§3.2 parallelization sketch) and are cross-validated against the numpy
+implementations in tests.
+
+Layouts are fixed-shape: documents are ELL-padded to ``L_pad`` frequent
+terms (rank = TC means "empty slot"), which is what both shard_map and the
+Pallas ``cluster_score`` kernel consume.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import FrequentTermView
+
+__all__ = [
+    "ell_pack",
+    "counts_from_ell",
+    "psi_jax",
+    "delta_add_tables_jax",
+    "scores_from_ell",
+    "kmeans_round_jax",
+]
+
+
+def ell_pack(view: FrequentTermView, l_pad: int | None = None) -> Tuple[np.ndarray, int]:
+    """Pack a FrequentTermView into an ELL (n_docs, L_pad) rank matrix.
+
+    Pad slots hold ``tc`` (one-past-last rank). Documents with more than
+    L_pad frequent terms keep their L_pad highest-P ones (ranks are sorted
+    by P, so the smallest ranks win; truncation is logged by the caller).
+    """
+    lens = np.diff(view.mat.indptr)
+    if l_pad is None:
+        l_pad = int(lens.max()) if len(lens) else 1
+    n = view.n_docs
+    out = np.full((n, l_pad), view.tc, dtype=np.int32)
+    indptr, indices = view.mat.indptr, view.mat.indices
+    for d in range(n):
+        lo, hi = indptr[d], indptr[d + 1]
+        ranks = np.sort(indices[lo:hi])[:l_pad]  # keep highest-P (lowest rank)
+        out[d, : len(ranks)] = ranks
+    return out, l_pad
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tc"))
+def counts_from_ell(ell: jnp.ndarray, assign: jnp.ndarray, k: int, tc: int) -> jnp.ndarray:
+    """(k, tc) n_j(t) from ELL doc-rank matrix + assignment."""
+    valid = ell < tc
+    key = assign[:, None] * (tc + 1) + jnp.where(valid, ell, tc)
+    flat = jnp.zeros(k * (tc + 1), dtype=jnp.int32).at[key.reshape(-1)].add(1)
+    return flat.reshape(k, tc + 1)[:, :tc]
+
+
+@jax.jit
+def psi_jax(counts: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Device ψ — same O(k·TC log TC) sort + suffix-sum as the host version."""
+    order = jnp.argsort(counts, axis=1, stable=True)
+    n_sorted = jnp.take_along_axis(counts, order, axis=1).astype(jnp.float32)
+    p_sorted = p[order]
+    suffix_excl = jnp.flip(jnp.cumsum(jnp.flip(p_sorted, 1), 1), 1) - p_sorted
+    return (p_sorted * n_sorted * suffix_excl).sum()
+
+
+@jax.jit
+def delta_add_tables_jax(counts: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """S⁺[j, t] = Σ_{u: n_j(u) > n_j(t)} P_u, batched over clusters."""
+    order = jnp.argsort(counts, axis=1, stable=True)
+    n_sorted = jnp.take_along_axis(counts, order, axis=1)
+    p_sorted = p[order]
+    suffix_incl = jnp.flip(jnp.cumsum(jnp.flip(p_sorted, 1), 1), 1)
+    suffix_pad = jnp.concatenate(
+        [suffix_incl, jnp.zeros((counts.shape[0], 1), suffix_incl.dtype)], axis=1
+    )
+    idx = jax.vmap(lambda ns, c: jnp.searchsorted(ns, c, side="right"))(
+        n_sorted, counts
+    )
+    return jnp.take_along_axis(suffix_pad, idx, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def scores_from_ell(
+    ell: jnp.ndarray, tables: jnp.ndarray, p: jnp.ndarray, block: int = 4096
+) -> jnp.ndarray:
+    """(n_docs, k) δ⁺ scores from the ELL layout.
+
+    scan over document blocks; per block gather tables[:, ranks] and
+    reduce over the L_pad axis.  This is the op the Pallas
+    ``cluster_score`` kernel implements with explicit VMEM tiling.
+    """
+    n, l_pad = ell.shape
+    k, tc = tables.shape
+    pad_docs = (-n) % block
+    ell_p = jnp.pad(ell, ((0, pad_docs), (0, 0)), constant_values=tc)
+    t_pad = jnp.concatenate([tables, jnp.zeros((k, 1), tables.dtype)], axis=1)
+    p_pad = jnp.concatenate([p.astype(tables.dtype), jnp.zeros((1,), tables.dtype)])
+
+    def body(_, blk):  # blk: (block, L_pad)
+        w = p_pad[blk]  # (block, L)
+        g = t_pad[:, blk]  # (k, block, L)
+        return None, jnp.einsum("bl,kbl->bk", w, g)
+
+    _, out = jax.lax.scan(
+        body, None, ell_p.reshape(-1, block, l_pad)
+    )
+    return out.reshape(-1, k)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tc", "block"))
+def kmeans_round_jax(
+    ell: jnp.ndarray,
+    assign: jnp.ndarray,
+    p: jnp.ndarray,
+    k: int,
+    tc: int,
+    block: int = 4096,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One full round-based K-means iteration on device.
+
+    Returns (new_assign, psi_before). Composes: counts → ψ → δ⁺ tables →
+    scores → argmin.
+    """
+    counts = counts_from_ell(ell, assign, k, tc)
+    psi = psi_jax(counts, p.astype(jnp.float32))
+    tables = delta_add_tables_jax(counts, p.astype(jnp.float32))
+    scores = scores_from_ell(ell, tables, p.astype(jnp.float32), block=block)
+    return jnp.argmin(scores, axis=1), psi

@@ -1,0 +1,247 @@
+"""The SeCluD objective ψ and its incremental δ lookup tables (paper §3.1–3.2).
+
+For a clustering C with per-cluster term counts ``n_i(t)`` and independent
+query-term marginals P[t], the expected conjunctive-query cost is
+
+    ψ(C) = Σ_{t<u} P[t]·P[u] · Σ_i min(n_i(t), n_i(u))          (Eq. 2)
+
+The marginal cost of ADDING a document containing term t to cluster j is
+
+    δ_j⁺(t) = P[t] · Σ_{u≠t, n_j(t) < n_j(u)} P[u]
+
+(only pairs where t is the *strictly smaller* list get more expensive), and
+of REMOVING it
+
+    δ_j⁻(t) = −P[t] · Σ_{u≠t, n_j(t) ≤ n_j(u)} P[u]
+
+(the min shrinks whenever t's list is the smaller-or-equal one).  Both are
+O(1) per (cluster, term) after building a lookup table: sort the cluster's
+counts, suffix-sum the P's in sorted order, and map each term through a
+``searchsorted`` on its own count (this also handles ties *exactly* — the
+paper's "n_j(t) < n_j(u)" is strict).
+
+Everything here is restricted to the TC most frequent terms (paper §3.2
+"Ignoring Infrequent Terms"): rare terms contribute negligibly to query
+cost but dominate the vocabulary.
+
+Implementation notes: numpy + scipy.sparse on the host (the clustering
+driver is recursion-heavy and runs on CPU; zero-compile vectorized numpy is
+the right tool), with jit'd JAX equivalents in ``repro.core.jax_ops`` used
+by the distributed/TPU path and cross-validated in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.data.corpus import Corpus
+
+__all__ = [
+    "FrequentTermView",
+    "frequent_term_view",
+    "cluster_counts",
+    "psi_from_counts",
+    "delta_add_tables",
+    "delta_remove_tables",
+    "assignment_scores",
+    "query_set_cost",
+]
+
+
+@dataclasses.dataclass
+class FrequentTermView:
+    """A corpus restricted to its TC most frequent terms.
+
+    * ``edge_doc`` / ``edge_rank`` — COO edges (document, frequent-term
+      rank); rank ∈ [0, TC).
+    * ``p_freq``  — P[t] for the frequent terms, in rank order.
+    * ``rank_of_term`` — n_terms array, −1 for infrequent terms.
+    * ``term_of_rank`` — TC array of original term ids.
+    * ``mat`` — CSR (n_docs × TC) with values P[rank] (the SpMM operand:
+      scores = mat @ tablesᵀ).
+    """
+
+    edge_doc: np.ndarray
+    edge_rank: np.ndarray
+    p_freq: np.ndarray
+    rank_of_term: np.ndarray
+    term_of_rank: np.ndarray
+    mat: sp.csr_matrix
+    n_docs: int
+
+    @property
+    def tc(self) -> int:
+        return len(self.term_of_rank)
+
+    def subset(self, doc_ids: np.ndarray) -> "FrequentTermView":
+        """Row-subset view (multilevel sampling / TopDown recursion).
+
+        Keeps the global rank space and P so tables remain comparable.
+        """
+        doc_ids = np.asarray(doc_ids)
+        sub = self.mat[doc_ids]
+        coo = sub.tocoo()
+        return FrequentTermView(
+            edge_doc=coo.row.astype(np.int64),
+            edge_rank=coo.col.astype(np.int32),
+            p_freq=self.p_freq,
+            rank_of_term=self.rank_of_term,
+            term_of_rank=self.term_of_rank,
+            mat=sub.tocsr(),
+            n_docs=len(doc_ids),
+        )
+
+
+def frequent_term_view(
+    corpus: Corpus, p: np.ndarray, tc: int = 10_000
+) -> FrequentTermView:
+    """Restrict a corpus to its ``tc`` highest-P terms (§3.2).
+
+    The paper selects by frequency; selecting by P[t] is equivalent when P
+    is estimated from frequencies and strictly better when P comes from a
+    query log (we care about *query* cost). Ties broken by term id.
+    """
+    m = corpus.n_terms
+    tc = min(tc, m)
+    top = np.argpartition(-p, tc - 1)[:tc] if tc < m else np.arange(m)
+    top = top[np.argsort(-p[top], kind="stable")]
+    rank_of_term = np.full(m, -1, dtype=np.int32)
+    rank_of_term[top] = np.arange(tc, dtype=np.int32)
+
+    ranks_all = rank_of_term[corpus.doc_terms]
+    keep = ranks_all >= 0
+    edge_rank = ranks_all[keep].astype(np.int32)
+    edge_doc = np.repeat(
+        np.arange(corpus.n_docs, dtype=np.int64), np.diff(corpus.doc_ptr)
+    )[keep]
+    p_freq = p[top].astype(np.float64)
+
+    mat = sp.csr_matrix(
+        (p_freq[edge_rank], (edge_doc, edge_rank)),
+        shape=(corpus.n_docs, tc),
+        dtype=np.float64,
+    )
+    return FrequentTermView(
+        edge_doc=edge_doc,
+        edge_rank=edge_rank,
+        p_freq=p_freq,
+        rank_of_term=rank_of_term,
+        term_of_rank=top.astype(np.int32),
+        mat=mat,
+        n_docs=corpus.n_docs,
+    )
+
+
+def cluster_counts(view: FrequentTermView, assign: np.ndarray, k: int) -> np.ndarray:
+    """n_j(t): (k, TC) int64 — documents of cluster j containing rank-t term."""
+    key = assign[view.edge_doc].astype(np.int64) * view.tc + view.edge_rank
+    return np.bincount(key, minlength=k * view.tc).reshape(k, view.tc)
+
+
+def psi_from_counts(counts: np.ndarray, p_freq: np.ndarray) -> float:
+    """ψ = Σ_i Σ_{t<u} P_t P_u min(n_i(t), n_i(u)), exactly, in O(k·TC·log TC).
+
+    Per cluster: sort terms by count ascending; then min(n_t, n_u) for any
+    pair is the count of the earlier-sorted one (ties give the same value
+    either way), so ψ_i = Σ_j P_(j) · n_(j) · (Σ_{l>j} P_(l)).
+    """
+    counts = np.asarray(counts)
+    order = np.argsort(counts, axis=1, kind="stable")
+    n_sorted = np.take_along_axis(counts, order, axis=1).astype(np.float64)
+    p_sorted = p_freq[order]
+    # suffix[l] = sum of p_sorted[l+1:]
+    suffix = np.cumsum(p_sorted[:, ::-1], axis=1)[:, ::-1]
+    suffix = np.concatenate([suffix[:, 1:], np.zeros((len(counts), 1))], axis=1)
+    return float((p_sorted * n_sorted * suffix).sum())
+
+
+def _sorted_tables(
+    counts: np.ndarray, p_freq: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-cluster (sorted counts, suffix-P) — shared by δ⁺ and δ⁻."""
+    order = np.argsort(counts, axis=1, kind="stable")
+    n_sorted = np.take_along_axis(counts, order, axis=1)
+    p_sorted = p_freq[order]
+    # suffix_incl[l] = sum of p_sorted[l:]
+    suffix_incl = np.cumsum(p_sorted[:, ::-1], axis=1)[:, ::-1]
+    return n_sorted, suffix_incl
+
+
+def delta_add_tables(counts: np.ndarray, p_freq: np.ndarray) -> np.ndarray:
+    """S⁺[j, t] = Σ_{u: n_j(u) > n_j(t)} P_u  (strict; excludes u = t).
+
+    δ_j⁺(t) = P[t]·S⁺[j, t]; δ_j⁺(d) = Σ_{t∈d} δ_j⁺(t) = (view.mat @ S⁺ᵀ)[d, j].
+    """
+    counts = np.asarray(counts)
+    k, tc = counts.shape
+    n_sorted, suffix_incl = _sorted_tables(counts, p_freq)
+    out = np.empty((k, tc), dtype=np.float64)
+    pad = np.zeros(1)
+    for j in range(k):  # k rows; each row one vectorized searchsorted
+        idx = np.searchsorted(n_sorted[j], counts[j], side="right")
+        suf = np.concatenate([suffix_incl[j], pad])
+        out[j] = suf[idx]
+    return out
+
+
+def delta_remove_tables(counts: np.ndarray, p_freq: np.ndarray) -> np.ndarray:
+    """S⁻[j, t] = Σ_{u≠t: n_j(u) ≥ n_j(t)} P_u  (paper §6: removal matters
+    for small clusters; used by the document-grained update mode)."""
+    counts = np.asarray(counts)
+    k, tc = counts.shape
+    n_sorted, suffix_incl = _sorted_tables(counts, p_freq)
+    out = np.empty((k, tc), dtype=np.float64)
+    pad = np.zeros(1)
+    for j in range(k):
+        idx = np.searchsorted(n_sorted[j], counts[j], side="left")
+        suf = np.concatenate([suffix_incl[j], pad])
+        out[j] = suf[idx] - p_freq  # drop u = t (its count ≥ itself)
+    return out
+
+
+def assignment_scores(view: FrequentTermView, tables: np.ndarray) -> np.ndarray:
+    """(n_docs, k) δ⁺ scores: one sparse-dense matmul (the SpMM hot loop;
+    the Pallas kernel `repro.kernels.cluster_score` is the TPU version)."""
+    return np.asarray(view.mat @ tables.T)
+
+
+def query_set_cost(
+    corpus: Corpus,
+    assign: Optional[np.ndarray],
+    k: int,
+    queries: np.ndarray,
+    model: str = "lookup",
+) -> float:
+    """Σ_q Σ_i Φ(n_i(t_q), n_i(u_q)) over an explicit query set.
+
+    ``assign=None`` means the unclustered baseline (k = 1).  Used for the
+    theoretical speedup S_T on held-out query logs — note this uses FULL
+    term counts, not the TC-restricted view (queries hit rare terms too).
+    """
+    from repro.index.intersect import pair_cost
+
+    terms = np.unique(queries)
+    tmap = {int(t): i for i, t in enumerate(terms)}
+    rows = np.array([tmap[int(t)] for t in queries.ravel()]).reshape(-1, 2)
+
+    if assign is None:
+        assign = np.zeros(corpus.n_docs, dtype=np.int64)
+        k = 1
+    # counts over only the queried terms: (len(terms), k)
+    sel = np.isin(corpus.doc_terms, terms)
+    e_term = corpus.doc_terms[sel]
+    e_doc = np.repeat(
+        np.arange(corpus.n_docs, dtype=np.int64), np.diff(corpus.doc_ptr)
+    )[sel]
+    e_rank = np.searchsorted(terms, e_term)
+    cnt = np.bincount(
+        e_rank.astype(np.int64) * k + assign[e_doc], minlength=len(terms) * k
+    ).reshape(len(terms), k)
+
+    x = cnt[rows[:, 0]]  # (nq, k)
+    y = cnt[rows[:, 1]]
+    return float(pair_cost(x, y, model).sum())

@@ -1,0 +1,236 @@
+"""SecludPipeline — the end-to-end public API of the paper's system.
+
+fit():   estimate P → frequent-term view → cluster (flat-multilevel "FM"
+         or TopDown "TD") → reorder → build the cluster index.
+evaluate(): the paper's three speedups against the unclustered baseline
+         (which, per [14], uses a *random* document permutation):
+
+  * S_T — theoretical, from the ψ cost model (Eq. 2) evaluated on the
+          actual query set;
+  * S_C — measured work of the two-level cluster-index query;
+  * S_R — measured work of the single-index Lookup query on the
+          cluster-contiguously *reordered* index.
+
+Every query algorithm returns the exact same result set (losslessness is
+asserted, modulo the id permutation) — the paper's defining property.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.cluster_index import ClusterIndex, build_cluster_index
+from repro.core.multilevel import multilevel_cluster
+from repro.core.objective import (
+    FrequentTermView,
+    cluster_counts,
+    frequent_term_view,
+    psi_from_counts,
+    query_set_cost,
+)
+from repro.core.reorder import cluster_ranges, reorder_permutation
+from repro.core.topdown import topdown_cluster
+from repro.data.corpus import Corpus
+from repro.data.query_log import QueryLog, term_probabilities
+from repro.index.build import InvertedIndex, build_index, permute_docs
+from repro.index.lookup import bucketize, lookup_intersect
+
+__all__ = ["SecludPipeline", "SecludResult"]
+
+
+@dataclasses.dataclass
+class SecludResult:
+    assign: np.ndarray
+    k: int
+    perm: np.ndarray  # old doc id -> new doc id (cluster-contiguous)
+    ranges: np.ndarray  # (k+1,) cluster boundaries in new id space
+    psi: float
+    psi_single: float
+    cluster_time_s: float
+    view: FrequentTermView
+    base_index: InvertedIndex  # randomized ids (the [14] baseline)
+    base_perm: np.ndarray
+    reordered_index: InvertedIndex
+    cluster_index: ClusterIndex
+
+    @property
+    def s_t(self) -> float:
+        """Theoretical speedup from ψ itself (frequent terms, Eq. 2)."""
+        return self.psi_single / max(self.psi, 1e-30)
+
+
+class SecludPipeline:
+    def __init__(
+        self,
+        tc: int = 10_000,
+        bucket_size: int = 16,
+        bucket_size_clusters: int = 8,
+        eps: float = 0.1,
+        chi: int = 8,
+        doc_grained_below: int = 2_048,
+        min_rel_improvement: float = 0.01,
+        seed: int = 0,
+    ):
+        self.tc = tc
+        self.bucket_size = bucket_size
+        self.bucket_size_clusters = bucket_size_clusters
+        self.eps = eps
+        self.chi = chi
+        self.doc_grained_below = doc_grained_below
+        self.min_rel_improvement = min_rel_improvement
+        self.seed = seed
+
+    # ------------------------------------------------------------------
+
+    def fit(
+        self,
+        corpus: Corpus,
+        k: int,
+        algo: str = "topdown",
+        log: Optional[QueryLog] = None,
+        p: Optional[np.ndarray] = None,
+    ) -> SecludResult:
+        if p is None:
+            p = term_probabilities(corpus.n_terms, log=log, corpus=corpus)
+        view = frequent_term_view(corpus, p, tc=self.tc)
+
+        t0 = time.perf_counter()
+        if algo in ("flat", "fm"):
+            res = multilevel_cluster(
+                view,
+                k,
+                eps=self.eps,
+                doc_grained_below=self.doc_grained_below,
+                min_rel_improvement=self.min_rel_improvement,
+                seed=self.seed,
+            )
+            assign, k_actual = res.assign, k
+        elif algo in ("topdown", "td"):
+            res = topdown_cluster(
+                view,
+                k,
+                chi=self.chi,
+                eps=self.eps,
+                doc_grained_below=self.doc_grained_below,
+                min_rel_improvement=self.min_rel_improvement,
+                seed=self.seed,
+            )
+            assign, k_actual = res.assign, res.k_actual
+        else:
+            raise ValueError(f"unknown algo {algo!r}")
+        cluster_time = time.perf_counter() - t0
+
+        counts = cluster_counts(view, assign, k_actual)
+        psi = psi_from_counts(counts, view.p_freq)
+        psi_single = psi_from_counts(
+            counts.sum(axis=0, keepdims=True), view.p_freq
+        )
+
+        index = build_index(corpus)
+        rng = np.random.default_rng(self.seed + 7)
+        base_perm = rng.permutation(corpus.n_docs)
+        base_index = permute_docs(index, base_perm)
+
+        perm = reorder_permutation(assign, k_actual)
+        ranges = cluster_ranges(assign, k_actual)
+        reordered = permute_docs(index, perm)
+        cidx = build_cluster_index(
+            reordered,
+            ranges,
+            bucket_size_clusters=self.bucket_size_clusters,
+            bucket_size_postings=self.bucket_size,
+        )
+        return SecludResult(
+            assign=assign,
+            k=k_actual,
+            perm=perm,
+            ranges=ranges,
+            psi=psi,
+            psi_single=psi_single,
+            cluster_time_s=cluster_time,
+            view=view,
+            base_index=base_index,
+            base_perm=base_perm,
+            reordered_index=reordered,
+            cluster_index=cidx,
+        )
+
+    # ------------------------------------------------------------------
+
+    def evaluate(
+        self,
+        corpus: Corpus,
+        result: SecludResult,
+        log: QueryLog,
+        check_lossless: bool = True,
+        max_queries: Optional[int] = None,
+        cost_model: str = "lookup",
+    ) -> Dict[str, float]:
+        """Work-metric speedups S_T / S_C / S_R over the query log."""
+        queries = log.queries[:max_queries] if max_queries else log.queries
+        n_docs = corpus.n_docs
+
+        base_total = 0.0
+        sc_total = 0.0
+        sr_total = 0.0
+        inv_base = np.empty(n_docs, dtype=np.int64)
+        inv_base[result.base_perm] = np.arange(n_docs)
+        inv_perm = np.empty(n_docs, dtype=np.int64)
+        inv_perm[result.perm] = np.arange(n_docs)
+
+        for t, u in queries:
+            t, u = int(t), int(u)
+            # Baseline: Lookup on the randomized single index.
+            a = result.base_index.postings(t)
+            b = result.base_index.postings(u)
+            if len(a) > len(b):
+                a, b = b, a
+            r0, w0 = lookup_intersect(
+                a, bucketize(b, n_docs, self.bucket_size)
+            )
+            base_total += w0["total"]
+            # S_C: two-level cluster-index query.
+            r1, w1 = result.cluster_index.query(t, u)
+            sc_total += w1["total"]
+            # S_R: single-index Lookup on the reordered index.
+            a2 = result.reordered_index.postings(t)
+            b2 = result.reordered_index.postings(u)
+            if len(a2) > len(b2):
+                a2, b2 = b2, a2
+            r2, w2 = lookup_intersect(
+                a2, bucketize(b2, n_docs, self.bucket_size)
+            )
+            sr_total += w2["total"]
+            if check_lossless:
+                s0 = np.sort(inv_base[r0])
+                s1 = np.sort(inv_perm[r1])
+                s2 = np.sort(inv_perm[r2])
+                assert np.array_equal(s0, s1) and np.array_equal(s0, s2), (
+                    f"lossless violation on query ({t},{u})"
+                )
+
+        s_t = (
+            query_set_cost(corpus, None, 1, queries, model=cost_model)
+            / max(
+                query_set_cost(
+                    corpus, result.assign, result.k, queries, model=cost_model
+                ),
+                1e-30,
+            )
+        )
+        return {
+            "S_T": float(s_t),
+            "S_C": base_total / max(sc_total, 1e-30),
+            "S_R": base_total / max(sr_total, 1e-30),
+            "work_baseline": base_total,
+            "work_cluster_index": sc_total,
+            "work_reordered": sr_total,
+            "n_queries": float(len(queries)),
+            "psi": result.psi,
+            "psi_single": result.psi_single,
+            "S_T_objective": result.s_t,
+        }

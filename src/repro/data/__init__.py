@@ -1,0 +1,31 @@
+"""Data substrate: synthetic corpora, query logs, and training pipelines.
+
+The paper evaluates on GOV2 / GOV2s / Wikipedia / pagenstecher.de with the
+AOL and site query logs.  None of those are shippable inside this container,
+so this package provides parameterized synthetic generators that match the
+*statistical shape* the paper relies on:
+
+  * Zipf-distributed term marginals (Figure 1 of the paper shows all query
+    logs are Zipf-like),
+  * latent-topic mixture so that documents are clusterable (the property
+    SeCluD exploits),
+  * log-normal document lengths, with a "sentence" mode emulating GOV2s
+    (many tiny documents),
+  * query logs with Zipf rank-probability and topical term co-occurrence.
+"""
+
+from repro.data.corpus import Corpus, CorpusSpec, synth_corpus, corpus_stats
+from repro.data.query_log import QueryLog, synth_query_log, term_probabilities
+from repro.data.pipeline import TokenPipeline, PipelineState
+
+__all__ = [
+    "Corpus",
+    "CorpusSpec",
+    "synth_corpus",
+    "corpus_stats",
+    "QueryLog",
+    "synth_query_log",
+    "term_probabilities",
+    "TokenPipeline",
+    "PipelineState",
+]

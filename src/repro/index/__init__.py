@@ -1,0 +1,47 @@
+"""Inverted-index substrate.
+
+* ``build``      — CSR inverted index over a Corpus, remapping, permutation
+* ``intersect``  — intersection algorithms + exact work accounting
+* ``lookup``     — the bucketed Lookup algorithm of Sanders & Transier
+                   (ALENEX'07), the paper's reference intersector [14]
+* ``batched``    — padded, fixed-shape batched query layouts for JAX/Pallas
+* ``compress``   — Golomb / Elias-gamma / Elias-delta / varbyte posting-list
+                   compression (paper Appendix A)
+"""
+
+from repro.index.build import InvertedIndex, build_index, permute_docs
+from repro.index.intersect import (
+    COST_MODELS,
+    intersect_merge,
+    intersect_searchsorted,
+    intersect_gallop,
+    pair_cost,
+)
+from repro.index.lookup import BucketedList, bucketize, lookup_intersect
+from repro.index.batched import BatchedQueries, batch_queries
+from repro.index.compress import (
+    encode_gaps,
+    decode_gaps,
+    posting_bits,
+    index_bits_per_posting,
+)
+
+__all__ = [
+    "InvertedIndex",
+    "build_index",
+    "permute_docs",
+    "COST_MODELS",
+    "intersect_merge",
+    "intersect_searchsorted",
+    "intersect_gallop",
+    "pair_cost",
+    "BucketedList",
+    "bucketize",
+    "lookup_intersect",
+    "BatchedQueries",
+    "batch_queries",
+    "encode_gaps",
+    "decode_gaps",
+    "posting_bits",
+    "index_bits_per_posting",
+]

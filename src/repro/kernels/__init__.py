@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes in C.
+
+Three kernels, each with the standard triple:
+
+* ``intersect``       — batched sorted-posting-list intersection, the
+                        paper's query inner loop (the C "Lookup" code).
+                        TPU-native tiled compare-merge with directory-based
+                        tile skipping (DESIGN.md §3).
+* ``cluster_score``   — the K-means δ⁺ scoring SpMM (the C clustering
+                        inner loop), as a one-hot-tiled MXU matmul over an
+                        ELL doc-term layout.  The same regime serves GNN
+                        aggregation and recsys embedding-bag.
+* ``flash_attention`` — blocked attention for the LM serving/training
+                        stack (standard FlashAttention tiling, used by the
+                        model zoo when running on TPU).
+
+Each directory holds ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper; CPU fallback = the reference), and
+``ref.py`` (pure-jnp oracle).  Kernels are validated in interpret mode on
+CPU across shape/dtype sweeps (tests/test_kernels_*.py); real-TPU Mosaic
+lowering is the deployment target.
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.cluster_score.ops import cluster_scores, embedding_bag
+from repro.kernels.cluster_score.ref import cluster_scores_ref
+
+__all__ = ["cluster_scores", "embedding_bag", "cluster_scores_ref"]

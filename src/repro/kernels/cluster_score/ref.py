@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the K-means δ⁺ scoring SpMM / weighted embedding-bag.
+
+Contract: ``ell`` (N, L) int32 holds per-document frequent-term ranks,
+padded with values >= TC (= table rows).  ``p`` (TC,) are the term
+weights P[t]; ``tables`` (TC, K) are the δ⁺ columns (or an embedding
+table).  Result (N, K):
+
+    out[d, :] = Σ_l  p[ell[d, l]] · tables[ell[d, l], :]      (pad → 0)
+
+This is exactly `scores = A @ Sᵀ` of DESIGN.md §3 in ELL layout, and also
+exactly an EmbeddingBag(sum) with per-sample weights (kernel_taxonomy
+§B.6/§B.11).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cluster_scores_ref"]
+
+
+@jax.jit
+def cluster_scores_ref(
+    ell: jnp.ndarray, p: jnp.ndarray, tables: jnp.ndarray
+) -> jnp.ndarray:
+    tc, k = tables.shape
+    valid = ell < tc
+    safe = jnp.where(valid, ell, 0)
+    w = jnp.where(valid, p[safe], 0.0)  # (N, L)
+    rows = tables[safe]  # (N, L, K)
+    return (w[..., None] * rows).sum(axis=1)

@@ -1,0 +1,48 @@
+"""Public flash-attention wrapper: (B, H, L, D) API, GQA-aware.
+
+TPU → Pallas kernel; CPU → pure-jnp reference (tests force interpret).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, Lq, D)
+    k: jnp.ndarray,  # (B, H, Lk, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    tile_q: int = 128,
+    tile_k: int = 128,
+    force_kernel: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_kernel):
+        return attention_ref(q, k, v, causal=causal, window=window)
+    if interpret is None:
+        interpret = not on_tpu
+    b, h, lq, d = q.shape
+    lk = k.shape[-2]
+    tq = min(tile_q, lq)
+    tk = min(tile_k, lk)
+    assert lq % tq == 0 and lk % tk == 0, "pad sequence to tile multiple"
+    out = flash_attention_kernel(
+        q.reshape(b * h, lq, d),
+        k.reshape(b * h, lk, d),
+        v.reshape(b * h, lk, d),
+        causal=causal,
+        window=window,
+        tile_q=tq,
+        tile_k=tk,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, lq, d)

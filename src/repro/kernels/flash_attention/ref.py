@@ -1,0 +1,43 @@
+"""Pure-jnp attention oracle (causal / sliding-window / full).
+
+Contract: q (B, H, Lq, D), k/v (B, H, Lk, D); ``causal`` masks j > i + off
+where off = Lk - Lq (decode alignment: the last query attends to all keys);
+``window`` additionally masks j < i + off - window + 1 (sliding window of
+size ``window``, inclusive of self).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    *_, lq, d = q.shape
+    lk = k.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    off = lk - lq
+    i = jnp.arange(lq)[:, None]
+    j = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= j <= i + off
+    if window is not None:
+        mask &= j > i + off - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

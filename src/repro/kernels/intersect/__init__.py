@@ -1,0 +1,4 @@
+from repro.kernels.intersect.ops import intersect_count
+from repro.kernels.intersect.ref import intersect_count_ref
+
+__all__ = ["intersect_count", "intersect_count_ref"]

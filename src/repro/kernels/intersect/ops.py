@@ -1,0 +1,61 @@
+"""Public jit'd wrapper for the batched intersection kernel.
+
+Pads ragged inputs to kernel-aligned shapes and dispatches:
+
+* on TPU        → the Pallas kernel (Mosaic),
+* elsewhere     → interpret mode when ``force_kernel`` (tests), else the
+                  pure-jnp reference (production CPU path — XLA's fused
+                  searchsorted is the right tool off-TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.intersect.kernel import intersect_count_kernel
+from repro.kernels.intersect.ref import PAD, intersect_count_ref
+
+__all__ = ["intersect_count"]
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.pad(
+        x,
+        ((0, rows - x.shape[0]), (0, cols - x.shape[1])),
+        constant_values=PAD,
+    )
+
+
+def intersect_count(
+    short,
+    long,
+    block_q: int = 8,
+    tile_s: int = 128,
+    tile_l: int = 128,
+    force_kernel: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-row |short ∩ long| for PAD-padded sorted int32 rows (B, *)."""
+    short = jnp.asarray(short, jnp.int32)
+    long = jnp.asarray(long, jnp.int32)
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_kernel):
+        return intersect_count_ref(short, long)
+    if interpret is None:
+        interpret = not on_tpu
+    b = int(np.ceil(short.shape[0] / block_q)) * block_q
+    ls = int(np.ceil(short.shape[1] / tile_s)) * tile_s
+    ll = int(np.ceil(long.shape[1] / tile_l)) * tile_l
+    out = intersect_count_kernel(
+        _pad_to(short, b, ls),
+        _pad_to(long, b, ll),
+        block_q=block_q,
+        tile_s=tile_s,
+        tile_l=tile_l,
+        interpret=interpret,
+    )
+    return out[: short.shape[0]]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for batched posting-list intersection.
+
+Contract (shared with the kernel): ``short`` (B, Ls) and ``long`` (B, Ll)
+are rows of sorted int32 doc ids padded with PAD = int32 max; the result
+is the per-row intersection size |short_row ∩ long_row| as int32 (B,).
+PAD never matches PAD: padding contributes zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# numpy scalar (not a jax array) so kernels can close over it as a literal
+PAD = np.int32(2**31 - 1)
+
+__all__ = ["intersect_count_ref", "PAD"]
+
+
+@jax.jit
+def intersect_count_ref(short: jnp.ndarray, long: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized binary search of each short element into the long row."""
+    pos = jax.vmap(jnp.searchsorted)(long, short)
+    pos = jnp.minimum(pos, long.shape[1] - 1)
+    hit = (jnp.take_along_axis(long, pos, axis=1) == short) & (short != PAD)
+    return hit.sum(axis=1).astype(jnp.int32)

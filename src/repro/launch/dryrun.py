@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell:
+  ``jit(step, in_shardings, out_shardings).lower(*ShapeDtypeStructs)
+  .compile()`` against the 16×16 single-pod mesh and the 2×16×16
+  multi-pod mesh, printing ``memory_analysis()`` (fits?) and
+  ``cost_analysis()`` (FLOPs/bytes) and recording collective bytes for
+  the §Roofline table.
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks
+the device count at first backend init, and only the dry-run may see 512
+host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch pna --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --shape train_4k --out o.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCH_NAMES, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, cost_scale, probe_overrides, probe_plan
+from repro.roofline.analysis import (
+    RooflineReport,
+    V5E,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+    model_flops,
+)
+
+
+def _compile_costs(spec, shape_name, mesh, extra_overrides):
+    """Compile one probe config and return (flops, bytes, coll dict)."""
+    plan = build_cell(spec, shape_name, mesh, extra_overrides)
+    ins, outs = plan.shardings(mesh)
+    jax.sharding.set_mesh(mesh)  # also sets the abstract mesh (shard_map MoE)
+    compiled = (
+        jax.jit(plan.step, in_shardings=ins, out_shardings=outs,
+                donate_argnums=plan.donate)
+        .lower(*plan.in_structs)
+        .compile()
+    )
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return float(cost.get("flops", 0.0)), float(cost.get("bytes accessed", 0.0)), coll
+
+
+def run_cell(spec, shape_name: str, mesh, mesh_name: str, verbose: bool = True):
+    cell = spec.cells[shape_name]
+    if cell.skip:
+        return {
+            "arch": spec.name,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "status": "SKIP",
+            "reason": cell.skip,
+        }
+    t0 = time.perf_counter()
+    plan = build_cell(spec, shape_name, mesh)
+    ins, outs = plan.shardings(mesh)
+    jax.sharding.set_mesh(mesh)  # also sets the abstract mesh (shard_map MoE)
+    jitted = jax.jit(plan.step, in_shardings=ins, out_shardings=outs,
+                     donate_argnums=plan.donate)
+    lowered = jitted.lower(*plan.in_structs)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    chips = mesh.devices.size
+    mf = model_flops(plan, cell)
+    report = analyze_compiled(
+        compiled, spec.name, shape_name, mesh_name, chips, mf
+    )
+    mem = compiled.memory_analysis()
+
+    # Scan-trip correction: XLA's cost_analysis counts a while-loop body
+    # ONCE; scanned models (LM layer stack, DIEN time recurrence) need a
+    # two-point probe to recover true totals (DESIGN.md §7).
+    probe = probe_plan(spec, shape_name, mesh)
+    probe_info = None
+    if probe is not None:
+        pname, (lo, hi), full = probe
+        t_probe = time.perf_counter()
+        f_lo, b_lo, c_lo = _compile_costs(
+            spec, shape_name, mesh, probe_overrides(spec, pname, lo)
+        )
+        f_hi, b_hi, c_hi = _compile_costs(
+            spec, shape_name, mesh, probe_overrides(spec, pname, hi)
+        )
+        scale = (full - lo) / max(hi - lo, 1)
+        mscale = cost_scale(spec, shape_name)
+        flops = (f_lo + scale * (f_hi - f_lo)) * mscale
+        byts = (b_lo + scale * (b_hi - b_lo)) * mscale
+        coll = {
+            k: int((c_lo[k] + scale * (c_hi[k] - c_lo[k])) * mscale)
+            for k in c_lo
+        }
+        probe_info = {
+            "param": pname, "lo": lo, "hi": hi, "full": full,
+            "probe_s": round(time.perf_counter() - t_probe, 1),
+            "raw_flops_per_chip": report.flops_per_chip,
+        }
+        report = RooflineReport(
+            arch=spec.name, shape=shape_name, mesh=mesh_name, chips=chips,
+            flops_per_chip=flops, bytes_per_chip=byts,
+            coll_bytes_per_chip=coll,
+            compute_s=flops / V5E.peak_flops,
+            memory_s=byts / V5E.hbm_bw,
+            collective_s=coll["total"] / V5E.link_bw,
+            model_flops_total=mf,
+            peak_memory_per_chip=report.peak_memory_per_chip,
+        )
+    out = {
+        "status": "OK",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "note": plan.note,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "probe": probe_info,
+        **report.to_dict(),
+    }
+    if verbose:
+        gib = lambda b: f"{(b or 0) / 2**30:.2f} GiB"
+        fits = (report.peak_memory_per_chip or 0) <= report.hw.hbm_bytes
+        print(
+            f"  [{mesh_name}] {spec.name}/{shape_name}: "
+            f"args={gib(out['memory']['argument_bytes'])} "
+            f"temp={gib(out['memory']['temp_bytes'])} "
+            f"peak/chip={gib(report.peak_memory_per_chip)} "
+            f"({'fits' if fits else 'OVER'} {report.hw.hbm_bytes / 2**30:.0f} GiB) | "
+            f"flops/chip={report.flops_per_chip:.3e} "
+            f"coll/chip={report.coll_bytes_per_chip['total'] / 2**20:.1f} MiB | "
+            f"t(c={report.compute_s * 1e3:.1f} m={report.memory_s * 1e3:.1f} "
+            f"x={report.collective_s * 1e3:.1f} ms) -> {report.dominant} | "
+            f"useful={report.useful_flop_ratio:.2f} "
+            f"roofline={report.roofline_fraction:.2f} | "
+            f"compile {t_compile:.0f}s"
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true", help="merge into --out")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+
+    for name in archs:
+        spec = get_arch(name)
+        shapes = [args.shape] if args.shape else list(spec.cells)
+        for shape_name in shapes:
+            for mesh_name, mesh in meshes:
+                key = (name, shape_name, mesh_name)
+                if any(
+                    (r.get("arch"), r.get("shape"), r.get("mesh")) == key
+                    for r in results
+                ):
+                    continue
+                try:
+                    r = run_cell(spec, shape_name, mesh, mesh_name)
+                except Exception as e:  # a failure here is a bug in our system
+                    traceback.print_exc()
+                    r = {
+                        "arch": name,
+                        "shape": shape_name,
+                        "mesh": mesh_name,
+                        "status": "FAIL",
+                        "error": f"{type(e).__name__}: {e}",
+                    }
+                    print(f"  [{mesh_name}] {name}/{shape_name}: FAIL {e}")
+                r.setdefault("arch", name)
+                r.setdefault("shape", shape_name)
+                r.setdefault("mesh", mesh_name)
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    ok = sum(1 for r in results if r["status"] == "OK")
+    skip = sum(1 for r in results if r["status"] == "SKIP")
+    fail = sum(1 for r in results if r["status"] == "FAIL")
+    print(f"\ndry-run: {ok} OK, {skip} SKIP (documented), {fail} FAIL -> {args.out}")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Serving launcher:  PYTHONPATH=src python -m repro.launch.serve --arch <id>
+
+Drives the family-appropriate serving path on CPU with the smoke config:
+LM → prefill + batched decode loop; recsys → batched scoring + retrieval.
+(The production path is exercised shape-for-shape by repro.launch.dryrun.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import get_arch
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke_cfg
+    rng = np.random.default_rng(0)
+
+    if spec.family == "lm":
+        from repro.models import transformer as T
+
+        params = T.init(cfg, jax.random.key(0))
+        b = args.requests
+        prompts = rng.integers(0, cfg.vocab, (b, 12)).astype(np.int32)
+        cache = T.init_cache(cfg, b, 12 + args.decode_steps)
+        t0 = time.perf_counter()
+        logits, cache = T.prefill(params, cfg, jnp.asarray(prompts), cache)
+        toks = []
+        step = jax.jit(lambda p, t, c: T.decode_step(p, cfg, t, c))
+        for _ in range(args.decode_steps):
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            toks.append(np.asarray(nxt)[:, 0])
+            logits, cache = step(params, nxt, cache)
+        dt = time.perf_counter() - t0
+        out = np.stack(toks, 1)
+        print(f"{b} requests x {args.decode_steps} tokens in {dt:.2f}s "
+              f"({b * args.decode_steps / dt:.0f} tok/s)")
+        print("first request:", out[0].tolist())
+    elif spec.family == "recsys":
+        from repro.launch.steps import _recsys_module
+
+        M = _recsys_module(spec.name)
+        params = M.init(cfg, jax.random.key(0))
+        b = max(args.requests, 4)
+        if spec.name == "dcn-v2":
+            batch = {
+                "dense": jnp.asarray(rng.standard_normal((b, cfg.n_dense)), jnp.float32),
+                "sparse_ids": jnp.asarray(rng.integers(0, cfg.vocab_per_field, (b, cfg.n_sparse)), jnp.int32),
+                "target_id": jnp.asarray(rng.integers(0, cfg.vocab_per_field, (b,)), jnp.int32),
+            }
+        else:
+            seq = getattr(cfg, "seq_len", None) or cfg.hist_len
+            batch = {
+                "hist_ids": jnp.asarray(rng.integers(0, cfg.vocab, (b, seq)), jnp.int32),
+                "hist_mask": jnp.ones((b, seq), jnp.float32),
+                "target_id": jnp.asarray(rng.integers(0, cfg.vocab, (b,)), jnp.int32),
+            }
+        t0 = time.perf_counter()
+        scores = M.forward(params, cfg, batch)
+        cands = jnp.asarray(rng.integers(0, getattr(cfg, "vocab", 500), 1000), jnp.int32)
+        top = M.score_candidates(params, cfg, batch, cands)
+        print(f"scored {b} requests ({np.asarray(scores)[:4].round(3)}...) and "
+              f"{top.shape[1]} candidates/request in {time.perf_counter() - t0:.2f}s")
+    else:
+        raise SystemExit("pna serving: use examples/search_service.py patterns")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,464 @@
+"""Step builders: one jit-able step per (architecture × shape) cell.
+
+``build_cell(arch_spec, shape_name, mesh)`` returns a CellPlan with the
+step function, ShapeDtypeStruct inputs (no allocation), and in/out
+shardings — everything the dry-run needs to ``jit(...).lower().compile()``
+and everything the real driver needs to run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, Cell
+from repro.dist import sharding as sh
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["CellPlan", "build_cell", "round_up"]
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _struct(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape_name: str
+    kind: str
+    step: Callable  # positional args matching in_structs
+    in_structs: Tuple[Any, ...]
+    in_specs: Tuple[Any, ...]
+    out_specs: Any  # pytree of PartitionSpec or None (infer)
+    cfg: Any
+    note: str = ""
+    donate: Tuple[int, ...] = ()  # donated args: train -> (params, opt);
+    # decode/prefill -> cache. Aliasing halves their memory footprint.
+
+    def shardings(self, mesh: Mesh):
+        ins = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s),
+            self.in_specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        outs = (
+            jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                self.out_specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            if self.out_specs is not None
+            else None
+        )
+        return ins, outs
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_cell(
+    spec: ArchSpec, shape_name: str, cell: Cell, mesh: Mesh,
+    extra_overrides: Optional[dict] = None,
+) -> CellPlan:
+    import dataclasses as dc
+
+    from repro.models import transformer as T
+
+    cfg = dc.replace(spec.cfg, **{**cell.overrides, **(extra_overrides or {})})
+    params_struct = jax.eval_shape(lambda: T.init(cfg, jax.random.key(0)))
+    pspecs = sh.lm_param_specs(params_struct, mesh, fsdp=spec.fsdp)
+    dp = sh.batch_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    if cell.kind == "train":
+        b, s = cell.batch, cell.extra["seq_len"]
+        micro = int(cell.extra.get("microbatches", 1))
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16" if spec.fsdp else "float32")
+        opt_struct = jax.eval_shape(functools.partial(adamw_init, opt_cfg), params_struct)
+        ospecs = sh.opt_state_specs(pspecs)
+        batch_struct = {
+            "tokens": _struct((b, s), jnp.int32),
+            "targets": _struct((b, s), jnp.int32),
+        }
+        bspecs = sh.batch_specs({k: v.shape for k, v in batch_struct.items()}, mesh)
+
+        def step(params, opt_state, batch):
+            if micro == 1:
+                loss, grads = jax.value_and_grad(
+                    lambda p: T.loss_fn(p, cfg, batch)
+                )(params)
+            else:
+                # Gradient accumulation over sequential microbatches: the
+                # scan (not unrolled) bounds activation memory to one
+                # microbatch; the dry-run scales costs by `micro`.
+                # The split must INTERLEAVE within each data shard's rows
+                # (reshape(micro, b//micro) would give each microbatch to
+                # a fraction of the shards and force a reshard), and the
+                # constraint pins the layout so every shard keeps
+                # b/(micro·n_data) rows per microbatch.
+                mspec = jax.sharding.NamedSharding(mesh, P(None, dp, None))
+                mb = {
+                    k: jax.lax.with_sharding_constraint(
+                        v.reshape(b // micro, micro, s).swapaxes(0, 1), mspec
+                    )
+                    for k, v in batch.items()
+                }
+
+                def body(gacc, m):
+                    l, g = jax.value_and_grad(
+                        lambda p: T.loss_fn(p, cfg, m)
+                    )(params)
+                    return jax.tree.map(jnp.add, gacc, g), l
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, p.dtype), params
+                )
+                gacc, losses = jax.lax.scan(body, g0, mb)
+                grads = jax.tree.map(lambda g: g / micro, gacc)
+                loss = losses.mean()
+            params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+            return params, opt_state, loss
+
+        return CellPlan(
+            arch=spec.name, shape_name=shape_name, kind="train", step=step,
+            in_structs=(params_struct, opt_struct, batch_struct),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, P()),
+            cfg=cfg, note=f"microbatches={micro}" if micro > 1 else "",
+            donate=(0, 1),
+        )
+
+    if cell.kind == "prefill":
+        b, s = cell.batch, cell.extra["seq_len"]
+        cache_struct = jax.eval_shape(lambda: T.init_cache(cfg, b, s))
+        cspecs = sh.cache_specs(cache_struct, mesh)
+        tok = _struct((b, s), jnp.int32)
+        tspec = sh.validate_spec(mesh, P(dp, None), tok.shape)
+
+        def step(params, tokens, cache):
+            return T.prefill(params, cfg, tokens, cache)
+
+        return CellPlan(
+            arch=spec.name, shape_name=shape_name, kind="prefill", step=step,
+            in_structs=(params_struct, tok, cache_struct),
+            in_specs=(pspecs, tspec, cspecs),
+            out_specs=(sh.validate_spec(mesh, P(dp, "model"), (b, cfg.vocab)), cspecs),
+            cfg=cfg, donate=(2,),
+        )
+
+    if cell.kind == "decode":
+        b = cell.batch
+        lmax = cell.extra["cache_len"]
+        cache_struct = jax.eval_shape(lambda: T.init_cache(cfg, b, lmax))
+        cspecs = sh.cache_specs(cache_struct, mesh)
+        tok = _struct((b, 1), jnp.int32)
+        tspec = sh.validate_spec(mesh, P(dp, None), tok.shape)
+
+        def step(params, tokens, cache):
+            return T.decode_step(params, cfg, tokens, cache)
+
+        return CellPlan(
+            arch=spec.name, shape_name=shape_name, kind="decode", step=step,
+            in_structs=(params_struct, tok, cache_struct),
+            in_specs=(pspecs, tspec, cspecs),
+            out_specs=(sh.validate_spec(mesh, P(dp, "model"), (b, cfg.vocab)), cspecs),
+            cfg=cfg, donate=(2,),
+        )
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _pna_cell(
+    spec: ArchSpec, shape_name: str, cell: Cell, mesh: Mesh,
+    extra_overrides: Optional[dict] = None,
+) -> CellPlan:
+    import dataclasses as dc
+
+    from repro.models import pna as M
+
+    ex = cell.extra
+    readout = ex.get("readout", "node")
+    cfg = dc.replace(
+        spec.cfg,
+        d_feat=ex.get("d_feat", spec.cfg.d_feat),
+        n_classes=ex.get("n_classes", spec.cfg.n_classes),
+        readout=readout,
+        **(extra_overrides or {}),
+    )
+    params_struct = jax.eval_shape(lambda: M.init(cfg, jax.random.key(0)))
+    pspecs = sh.pna_param_specs(params_struct, mesh)
+    opt_cfg = AdamWConfig()
+    opt_struct = jax.eval_shape(functools.partial(adamw_init, opt_cfg), params_struct)
+    ospecs = sh.opt_state_specs(pspecs)
+    dp = sh.batch_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    if cell.kind == "train_minibatch":
+        from repro.data.graphs import NeighborSampler
+
+        class _B:  # budget computation without building the real graph
+            fanouts = ex["fanouts"]
+
+        n_pad, e_pad = NeighborSampler.budget(_B, cell.batch)
+        n_pad = round_up(n_pad, 512)
+        e_pad = round_up(e_pad, 512)
+        batch_struct = {
+            "feats": _struct((n_pad, ex["d_feat"]), jnp.float32),
+            "edges": _struct((e_pad, 2), jnp.int32),
+            "edge_mask": _struct((e_pad,), jnp.float32),
+            "seed_pos": _struct((cell.batch,), jnp.int32),
+            "labels": _struct((cell.batch,), jnp.int32),
+        }
+        note = f"sampled subgraph: N_pad={n_pad} E_pad={e_pad}"
+    elif readout == "graph":
+        n = cell.batch * ex["nodes_per_graph"]
+        e = cell.batch * ex["edges_per_graph"]
+        n_pad, e_pad = round_up(n, 512), round_up(e, 512)
+        batch_struct = {
+            "feats": _struct((n_pad, ex["d_feat"]), jnp.float32),
+            "edges": _struct((e_pad, 2), jnp.int32),
+            "edge_mask": _struct((e_pad,), jnp.float32),
+            "graph_id": _struct((n_pad,), jnp.int32),
+            "labels": _struct((cell.batch,), jnp.int32),
+        }
+        note = f"batched molecules: N_pad={n_pad} E_pad={e_pad}"
+    else:
+        n_pad = round_up(ex["n_nodes"], 512)
+        e_pad = round_up(ex["n_edges"], 512)
+        batch_struct = {
+            "feats": _struct((n_pad, ex["d_feat"]), jnp.float32),
+            "edges": _struct((e_pad, 2), jnp.int32),
+            "edge_mask": _struct((e_pad,), jnp.float32),
+            "labels": _struct((n_pad,), jnp.int32),
+            "label_mask": _struct((n_pad,), jnp.float32),
+        }
+        note = f"full graph: N_pad={n_pad} E_pad={e_pad}"
+
+    bspecs = sh.batch_specs(
+        {k: v.shape for k, v in batch_struct.items()},
+        mesh,
+        field_rules={
+            # nodes over data-parallel axes, edges over model
+            "feats": P(dp, None),
+            "labels": P(dp) if readout == "node" and cell.kind == "train" else P(),
+            "label_mask": P(dp),
+            "graph_id": P(dp),
+            "edges": P("model", None),
+            "edge_mask": P("model"),
+            "seed_pos": P(),
+        },
+    )
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: M.loss_fn(p, cfg, batch))(params)
+        params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss
+
+    return CellPlan(
+        arch=spec.name, shape_name=shape_name, kind=cell.kind, step=step,
+        in_structs=(params_struct, opt_struct, batch_struct),
+        in_specs=(pspecs, ospecs, bspecs),
+        out_specs=(pspecs, ospecs, P()),
+        cfg=cfg, note=note, donate=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_struct(name: str, cfg, batch: int):
+    if name == "dien":
+        return {
+            "hist_ids": _struct((batch, cfg.seq_len), jnp.int32),
+            "hist_mask": _struct((batch, cfg.seq_len), jnp.float32),
+            "target_id": _struct((batch,), jnp.int32),
+            "label": _struct((batch,), jnp.float32),
+        }
+    if name == "mind":
+        return {
+            "hist_ids": _struct((batch, cfg.hist_len), jnp.int32),
+            "hist_mask": _struct((batch, cfg.hist_len), jnp.float32),
+            "target_id": _struct((batch,), jnp.int32),
+            "label": _struct((batch,), jnp.float32),
+        }
+    if name == "dcn-v2":
+        return {
+            "dense": _struct((batch, cfg.n_dense), jnp.float32),
+            "sparse_ids": _struct((batch, cfg.n_sparse), jnp.int32),
+            "target_id": _struct((batch,), jnp.int32),
+            "label": _struct((batch,), jnp.float32),
+        }
+    if name == "bert4rec":
+        return {
+            "hist_ids": _struct((batch, cfg.seq_len), jnp.int32),
+            "hist_mask": _struct((batch, cfg.seq_len), jnp.float32),
+            "target_id": _struct((batch,), jnp.int32),
+            "label": _struct((batch,), jnp.float32),
+        }
+    raise KeyError(name)
+
+
+def _recsys_module(name: str):
+    from repro.models.recsys import bert4rec, dcnv2, dien, mind
+
+    return {
+        "dien": dien,
+        "mind": mind,
+        "dcn-v2": dcnv2,
+        "bert4rec": bert4rec,
+    }[name]
+
+
+def _recsys_cell(
+    spec: ArchSpec, shape_name: str, cell: Cell, mesh: Mesh,
+    extra_overrides: Optional[dict] = None,
+) -> CellPlan:
+    import dataclasses as dc
+
+    M = _recsys_module(spec.name)
+    cfg = dc.replace(spec.cfg, **(extra_overrides or {}))
+    params_struct = jax.eval_shape(lambda: M.init(cfg, jax.random.key(0)))
+    pspecs = sh.recsys_param_specs(params_struct, mesh)
+    dp = sh.batch_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_struct = jax.eval_shape(
+            functools.partial(adamw_init, opt_cfg), params_struct
+        )
+        ospecs = sh.opt_state_specs(pspecs)
+        batch_struct = _recsys_batch_struct(spec.name, cfg, cell.batch)
+        bspecs = sh.batch_specs({k: v.shape for k, v in batch_struct.items()}, mesh)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: M.loss_fn(p, cfg, batch))(
+                params
+            )
+            params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+            return params, opt_state, loss
+
+        return CellPlan(
+            arch=spec.name, shape_name=shape_name, kind="train", step=step,
+            in_structs=(params_struct, opt_struct, batch_struct),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, P()),
+            cfg=cfg, donate=(0, 1),
+        )
+
+    if cell.kind == "serve":
+        batch_struct = _recsys_batch_struct(spec.name, cfg, cell.batch)
+        batch_struct.pop("label")
+        bspecs = sh.batch_specs({k: v.shape for k, v in batch_struct.items()}, mesh)
+
+        def step(params, batch):
+            return M.forward(params, cfg, batch)
+
+        return CellPlan(
+            arch=spec.name, shape_name=shape_name, kind="serve", step=step,
+            in_structs=(params_struct, batch_struct),
+            in_specs=(pspecs, bspecs),
+            out_specs=sh.validate_spec(mesh, P(dp), (cell.batch,)),
+            cfg=cfg,
+        )
+
+    if cell.kind == "retrieval":
+        n_cand = cell.extra["n_candidates"]
+        batch_struct = _recsys_batch_struct(spec.name, cfg, cell.batch)
+        batch_struct.pop("label")
+        bspecs = sh.batch_specs({k: v.shape for k, v in batch_struct.items()}, mesh)
+        # batch=1: replicate the query, shard the candidates.
+        bspecs = jax.tree.map(lambda _: P(), bspecs, is_leaf=lambda x: isinstance(x, P))
+        cand = _struct((n_cand,), jnp.int32)
+        cand_spec = sh.validate_spec(mesh, P(dp), cand.shape)
+
+        def step(params, batch, cand_ids):
+            return M.score_candidates(params, cfg, batch, cand_ids)
+
+        return CellPlan(
+            arch=spec.name, shape_name=shape_name, kind="retrieval", step=step,
+            in_structs=(params_struct, batch_struct, cand),
+            in_specs=(pspecs, bspecs, cand_spec),
+            out_specs=sh.validate_spec(mesh, P(None, dp), (cell.batch, n_cand)),
+            cfg=cfg,
+        )
+
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(
+    spec: ArchSpec, shape_name: str, mesh: Mesh,
+    extra_overrides: Optional[dict] = None,
+) -> CellPlan:
+    cell = spec.cells[shape_name]
+    if cell.skip:
+        raise ValueError(f"cell {spec.name}/{shape_name} is skipped: {cell.skip}")
+    if spec.family == "lm":
+        return _lm_cell(spec, shape_name, cell, mesh, extra_overrides)
+    if spec.family == "gnn":
+        return _pna_cell(spec, shape_name, cell, mesh, extra_overrides)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape_name, cell, mesh, extra_overrides)
+    raise ValueError(spec.family)
+
+
+def probe_plan(spec: ArchSpec, shape_name: str, mesh: Mesh):
+    """Scan-trip probe spec for cost extrapolation (see dryrun.py):
+    returns (param_name, probe_values, full_value) or None.
+
+    cost_analysis counts a while-loop body ONCE, so scanned models report
+    per-trip costs. We lower two probe configs and extrapolate linearly.
+    For gemma3 the probe stride is one local:global period so both layer
+    kinds are represented.
+    """
+    if spec.family == "lm":
+        # One local:global period per probe step so both layer kinds are
+        # sampled (gemma3); lo >= 2 because XLA optimizes the single-layer
+        # case non-linearly (measured — see EXPERIMENTS.md §Dry-run).
+        period = spec.cfg.global_every or 1
+        lo = max(2, period)
+        return ("n_layers", (lo, 2 * lo), spec.cfg.n_layers)
+    if spec.name == "dien":
+        # GRU/AUGRU scans over time; everything else is T-independent.
+        return ("seq_len", (2, 4), spec.cfg.seq_len)
+    return None
+
+
+def probe_overrides(spec: ArchSpec, param_name: str, value: int) -> dict:
+    """Config overrides for one probe compile.  The probed scan must be
+    UNROLLED (scan_unroll=value) — otherwise both probe points report the
+    same single-body cost and the extrapolation degenerates."""
+    return {param_name: value, "scan_unroll": value}
+
+
+def cost_scale(spec: ArchSpec, shape_name: str) -> int:
+    """Known outer-loop trip counts not visible to cost_analysis: the
+    gradient-accumulation scan (microbatches) runs its body `micro`
+    times."""
+    cell = spec.cells[shape_name]
+    if cell.kind == "train":
+        return int(cell.extra.get("microbatches", 1))
+    return 1

@@ -1,0 +1,15 @@
+"""Architecture zoo.
+
+Pure-pytree models (no flax): every architecture exposes
+
+  * ``init(cfg, key)``                  → params pytree
+  * ``forward`` / family-specific steps → pure functions
+  * ``loss``-producing train closures consumed by ``repro.train``
+
+Deep stacks are built with ``lax.scan`` over stacked per-layer params so
+HLO size and compile time are O(1) in depth (a 64-layer 32B config must
+compile on one CPU core for the dry-run).
+
+Submodules are imported lazily (``repro.models.transformer`` etc.) to
+keep import order acyclic.
+"""

@@ -1,0 +1,14 @@
+"""RecSys architectures: DIEN, MIND, DCN-v2, BERT4Rec.
+
+Shared substrate in ``embedding.py``: JAX has no native EmbeddingBag —
+we build it from ``jnp.take`` + segment/one-hot reductions (this IS part
+of the system, kernel_taxonomy §B.6), with the Pallas ``cluster_score``
+kernel as the TPU hot path.
+
+Every model exposes ``init``, ``forward`` (CTR logit or scores),
+``loss_fn``, and ``score_candidates`` (the ``retrieval_cand`` head:
+user representation against 10⁶ candidate embeddings as one batched
+matmul — never a loop).  The SeCluD integration (conjunctive pre-filter
+over candidate attributes before dense scoring) lives in
+``repro.serve.retrieval``.
+"""

@@ -1,0 +1,147 @@
+"""BERT4Rec — bidirectional transformer for sequential recommendation
+(Sun et al., arXiv:1904.06690).
+
+Masked-item modelling (Cloze): random history positions are replaced by a
+[MASK] token and predicted from both directions.  Encoder-only — there is
+no decode step (the assigned recsys shapes are all encode/score).
+
+Config: embed_dim=64, 2 blocks, 2 heads, seq_len=200.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.recsys.embedding import embedding_init, lookup
+
+__all__ = ["BERT4RecConfig", "init", "forward", "loss_fn", "score_candidates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig:
+    name: str = "bert4rec"
+    vocab: int = 1_000_000  # items; id 0 reserved as [PAD], 1 as [MASK]
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff: int = 256
+    mask_prob: float = 0.2
+    dtype: str = "float32"
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.n_heads
+
+    def n_params(self) -> int:
+        e = self.embed_dim
+        per = 4 * e * e + 2 * e * self.d_ff + 2 * e
+        return self.vocab * e + self.seq_len * e + self.n_blocks * per + e
+
+
+def _block_init(cfg: BERT4RecConfig, key):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": jnp.zeros((cfg.embed_dim,)),
+        "attn": L.gqa_attention_init(
+            ks[0], cfg.embed_dim, cfg.n_heads, cfg.n_heads, cfg.head_dim
+        ),
+        "ffn_norm": jnp.zeros((cfg.embed_dim,)),
+        "mlp": L.mlp_init(ks[1], cfg.embed_dim, cfg.d_ff, gated=False),
+    }
+
+
+def init(cfg: BERT4RecConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "item_embed": embedding_init(ks[0], cfg.vocab, cfg.embed_dim),
+        "pos_embed": jax.random.normal(ks[1], (cfg.seq_len, cfg.embed_dim)) * 0.02,
+        "blocks": jax.vmap(lambda k: _block_init(cfg, k))(
+            jax.random.split(ks[2], cfg.n_blocks)
+        ),
+        "final_norm": jnp.zeros((cfg.embed_dim,)),
+    }
+
+
+def encode(params, cfg: BERT4RecConfig, ids: jnp.ndarray, mask: jnp.ndarray):
+    """ids (B, T) -> hidden (B, T, e); bidirectional attention over valid
+    positions (padding masked via large-negative scores through value
+    zeroing — adequate for fixed-length padded histories)."""
+    b, t = ids.shape
+    x = lookup(params["item_embed"], ids, cfg.adtype)
+    x = x + params["pos_embed"][:t].astype(cfg.adtype)[None]
+    x = x * mask[..., None].astype(cfg.adtype)
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+    def body(x, bp):
+        h, _ = L.gqa_attention_apply(
+            bp["attn"],
+            L.rms_norm(x, bp["attn_norm"]),
+            positions,
+            cfg.n_heads,
+            cfg.n_heads,
+            cfg.head_dim,
+            rope_theta=10_000.0,
+            causal=False,  # bidirectional
+            window=None,
+        )
+        x = x + h * mask[..., None].astype(x.dtype)
+        y = L.mlp_apply(bp["mlp"], L.rms_norm(x, bp["ffn_norm"]), act="gelu")
+        return x + y * mask[..., None].astype(x.dtype), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.n_blocks)
+    return L.rms_norm(x, params["final_norm"])
+
+
+def forward(params, cfg: BERT4RecConfig, batch) -> jnp.ndarray:
+    """Serve scoring: encode history, score target at the last position.
+    Returns (B,) logits."""
+    h = encode(params, cfg, batch["hist_ids"], batch["hist_mask"])
+    last = h[:, -1]  # (B, e) — next-item representation
+    tgt = lookup(params["item_embed"], batch["target_id"], cfg.adtype)
+    return jnp.einsum("be,be->b", last, tgt)
+
+
+def loss_fn(params, cfg: BERT4RecConfig, batch) -> jnp.ndarray:
+    """Cloze training with deterministic in-batch masking derived from the
+    step data (mask positions provided by the pipeline or derived here)."""
+    ids = batch["hist_ids"]
+    mask = batch["hist_mask"]
+    b, t = ids.shape
+    # Derive mask positions pseudo-randomly from ids (stateless; constants
+    # stay within int32).
+    h = (ids * 48271 + 97) % 1000
+    cloze = (h < int(cfg.mask_prob * 1000)) & (mask > 0)
+    masked_ids = jnp.where(cloze, jnp.ones_like(ids), ids)  # [MASK] = 1
+    hidden = encode(params, cfg, masked_ids, mask)  # (B, T, e)
+    # Sampled softmax with a shared negative set (full 10^6-way softmax is
+    # a serving-only shape; (BT)^2 in-batch logits would be astronomical).
+    n_neg = 512
+    flat_h = hidden.reshape(b * t, -1)
+    flat_ids = ids.reshape(b * t)
+    flat_cloze = cloze.reshape(b * t)
+    neg_ids = (flat_ids[:n_neg] * 40503 + 7) % cfg.vocab  # stateless draws
+    neg = lookup(params["item_embed"], neg_ids, cfg.adtype)  # (n_neg, e)
+    pos = lookup(params["item_embed"], flat_ids, cfg.adtype)  # (BT, e)
+    gold = jnp.einsum("ne,ne->n", flat_h, pos).astype(jnp.float32)  # (BT,)
+    neg_logits = (flat_h @ neg.T).astype(jnp.float32)  # (BT, n_neg)
+    lse = jax.scipy.special.logsumexp(
+        jnp.concatenate([gold[:, None], neg_logits], axis=-1), axis=-1
+    )
+    per_tok = (lse - gold) * flat_cloze.astype(jnp.float32)
+    return per_tok.sum() / jnp.maximum(flat_cloze.sum(), 1.0)
+
+
+def score_candidates(params, cfg: BERT4RecConfig, batch, cand_ids) -> jnp.ndarray:
+    h = encode(params, cfg, batch["hist_ids"], batch["hist_mask"])
+    user = h[:, -1]  # (B, e)
+    cands = lookup(params["item_embed"], cand_ids, cfg.adtype)  # (N, e)
+    return user @ cands.T

@@ -1,0 +1,112 @@
+"""DCN-v2 — Deep & Cross Network v2 (Wang et al., arXiv:2008.13535).
+
+Explicit feature crosses  x_{l+1} = x₀ ⊙ (W_l x_l + b_l) + x_l  (full-rank
+W, the paper's strongest variant) in parallel with a deep MLP tower,
+concatenated into the CTR logit.  Assigned config: 13 dense + 26 sparse
+fields, embed_dim=16, 3 cross layers, MLP 1024-1024-512.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.recsys.embedding import embedding_init, lookup, mlp_tower, mlp_tower_init
+
+__all__ = ["DCNv2Config", "init", "forward", "loss_fn", "score_candidates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNv2Config:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab_per_field: int = 100_000
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp: tuple = (1024, 1024, 512)
+    dtype: str = "float32"
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_input(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    def n_params(self) -> int:
+        d = self.d_input
+        emb = self.n_sparse * self.vocab_per_field * self.embed_dim
+        cross = self.n_cross_layers * (d * d + d)
+        dims = (d,) + self.mlp
+        deep = sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        head = (d + self.mlp[-1]) + 1
+        return emb + cross + deep + head
+
+
+def init(cfg: DCNv2Config, key) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_input
+    cross_keys = jax.random.split(ks[1], cfg.n_cross_layers)
+    return {
+        # one stacked table (F, V, e) — row-shardable over 'model'
+        "tables": jax.vmap(
+            lambda k: embedding_init(k, cfg.vocab_per_field, cfg.embed_dim)
+        )(jax.random.split(ks[0], cfg.n_sparse)),
+        "cross": jax.vmap(lambda k: L.dense_init(k, d, d, bias=True))(cross_keys),
+        "deep": mlp_tower_init(ks[2], (d,) + cfg.mlp),
+        "head": L.dense_init(ks[3], d + cfg.mlp[-1], 1, bias=True),
+    }
+
+
+def _embed_input(params, cfg: DCNv2Config, batch) -> jnp.ndarray:
+    ids = batch["sparse_ids"] % cfg.vocab_per_field  # (B, F)
+    # Per-field gather from the stacked (F, V, e) table.
+    emb = jax.vmap(lambda tbl, i: jnp.take(tbl, i, axis=0), in_axes=(0, 1), out_axes=1)(
+        params["tables"], ids
+    )  # (B, F, e)
+    b = ids.shape[0]
+    return jnp.concatenate(
+        [batch["dense"].astype(cfg.adtype), emb.reshape(b, -1).astype(cfg.adtype)],
+        axis=-1,
+    )
+
+
+def forward(params, cfg: DCNv2Config, batch) -> jnp.ndarray:
+    x0 = _embed_input(params, cfg, batch)  # (B, d)
+
+    def cross_body(x, lp):
+        return x0 * (x @ lp["kernel"].astype(x.dtype) + lp["bias"].astype(x.dtype)) + x, None
+
+    xc, _ = jax.lax.scan(
+        cross_body, x0, params["cross"], unroll=cfg.n_cross_layers
+    )
+    xd = mlp_tower(params["deep"], x0, final_act=True)
+    out = L.dense(params["head"], jnp.concatenate([xc, xd], axis=-1))
+    return out[:, 0]
+
+
+def loss_fn(params, cfg: DCNv2Config, batch) -> jnp.ndarray:
+    logit = forward(params, cfg, batch).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+
+
+def score_candidates(params, cfg: DCNv2Config, batch, cand_ids) -> jnp.ndarray:
+    """retrieval_cand adaptation (DESIGN.md §5): DCN-v2 is a ranking
+    model, not two-tower; for candidate scoring we use the deep-tower
+    user representation against candidate embeddings from field 0
+    (documented as an adaptation, not the paper's own serving mode)."""
+    x0 = _embed_input(params, cfg, batch)
+    user = mlp_tower(params["deep"], x0, final_act=True)  # (B, mlp[-1])
+    cands = lookup(
+        params["tables"][0], cand_ids % cfg.vocab_per_field, cfg.adtype
+    )  # (N, e)
+    proj = user[:, : cfg.embed_dim]  # (B, e) — shared subspace
+    return proj @ cands.T

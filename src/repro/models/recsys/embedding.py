@@ -1,0 +1,51 @@
+"""Embedding substrate for recsys: big tables, bags, MLP towers.
+
+Tables are row(vocab)-sharded over the 'model' mesh axis in the
+distributed configs (DLRM-style); lookups are plain ``jnp.take`` which
+XLA SPMD turns into a sharded gather + reduce.  The multi-hot bag uses
+``jnp.take`` + sum (EmbeddingBag(sum) — no native op in JAX).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["embedding_init", "lookup", "bag_lookup", "mlp_tower_init", "mlp_tower"]
+
+
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.05
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    out = jnp.take(table, ids, axis=0)
+    return out.astype(dtype) if dtype is not None else out
+
+
+def bag_lookup(
+    table: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """EmbeddingBag(sum): ids (..., L) -> (..., dim)."""
+    e = jnp.take(table, ids, axis=0)
+    if mask is not None:
+        e = e * mask[..., None].astype(e.dtype)
+    return e.sum(axis=-2)
+
+
+def mlp_tower_init(key, dims, bias: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        L.dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+        for i, k in enumerate(ks)
+    ]
+
+
+def mlp_tower(params, x: jnp.ndarray, final_act: bool = False) -> jnp.ndarray:
+    for i, p in enumerate(params):
+        x = L.dense(p, x)
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,348 @@
+"""The LM family: dense GQA transformers (Qwen1.5), hybrid local:global
+(gemma3), and MoE (Arctic dense+MoE residual, Qwen3-MoE), one codebase.
+
+Layers are stacked (leading L axis) and executed with ``lax.scan`` so HLO
+and compile time are depth-independent. Heterogeneous layer behaviour
+(gemma3's 5 local : 1 global pattern) is data: a per-layer window array
+scanned alongside the params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["MoESpec", "LMConfig", "init", "forward", "loss_fn", "prefill", "decode_step", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # Arctic: dense FFN in parallel with MoE
+    aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    window: Optional[int] = None  # sliding window for local layers
+    global_every: Optional[int] = None  # every Nth layer is global (gemma3: 6)
+    moe: Optional[MoESpec] = None
+    act: str = "silu"
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "none"  # none | full | dots
+    kv_quant: bool = False  # int8 KV cache for long-context serving
+    loss_chunk: int = 512  # sequence chunk for the fused CE
+    attn_q_chunk: int | None = None  # flash-style query tiling (memory)
+    scan_unroll: int = 1  # layer-scan unroll (dry-run probes set = n_layers)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def layer_windows(self) -> jnp.ndarray:
+        """Per-layer attention window; 0 = global (no window)."""
+        if self.window is None:
+            return jnp.zeros((self.n_layers,), jnp.int32)
+        w = jnp.full((self.n_layers,), self.window, jnp.int32)
+        if self.global_every:
+            idx = jnp.arange(self.n_layers)
+            w = jnp.where((idx + 1) % self.global_every == 0, 0, w)
+        return w
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6·N·D model FLOPs)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+        attn += self.n_heads * self.head_dim * d
+        if self.moe is not None:
+            ff = self.moe.n_experts * 3 * d * self.moe.d_expert + d * self.moe.n_experts
+            if self.moe.dense_residual:
+                ff += 3 * d * f
+        else:
+            ff = 3 * d * f
+        per_layer = attn + ff + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+        attn += self.n_heads * self.head_dim * d
+        ff = self.moe.top_k * 3 * d * self.moe.d_expert + d * self.moe.n_experts
+        if self.moe.dense_residual:
+            ff += 3 * d * f
+        per_layer = attn + ff + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: LMConfig, key) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+        "attn": L.gqa_attention_init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=cfg.pdtype,
+        ),
+        "ffn_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = L.moe_init(
+            ks[1], cfg.d_model, cfg.moe.d_expert, cfg.moe.n_experts,
+            dtype=cfg.pdtype,
+        )
+        if cfg.moe.dense_residual:
+            p["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype=cfg.pdtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype=cfg.pdtype)
+    return p
+
+
+def init(cfg: LMConfig, key) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    params = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), cfg.pdtype)
+        * (cfg.d_model**-0.5),
+        "layers": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab), cfg.pdtype)
+            * (cfg.d_model**-0.5)
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg: LMConfig, lp, x, positions, window, cache=None):
+    """One transformer block. window: int32 scalar, 0 = global."""
+    win = jnp.where(window > 0, window, jnp.int32(2**30))
+    h, new_cache = L.gqa_attention_apply(
+        lp["attn"],
+        L.rms_norm(x, lp["attn_norm"]),
+        positions,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+        causal=True,
+        window=win,
+        cache=cache,
+        q_chunk=cfg.attn_q_chunk,
+    )
+    x = x + h
+    xin = L.rms_norm(x, lp["ffn_norm"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        b, s, d = xin.shape
+        y, aux = L.moe_apply(
+            lp["moe"], xin.reshape(b * s, d), cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor, act=cfg.act,
+        )
+        y = y.reshape(b, s, d)
+        if cfg.moe.dense_residual:
+            y = y + L.mlp_apply(lp["mlp"], xin, cfg.act)
+    else:
+        y = L.mlp_apply(lp["mlp"], xin, cfg.act)
+    return x + y, aux, new_cache
+
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray, positions=None):
+    """Returns (hidden (B, S, d), aux_loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = params["embed"].astype(cfg.adtype)[tokens] * (cfg.d_model**0.5)
+    windows = cfg.layer_windows()
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, win = xs
+        if cfg.remat == "full":
+            fn = jax.checkpoint(
+                lambda lp_, x_: _block(cfg, lp_, x_, positions, win)[:2]
+            )
+            x_new, a = fn(lp, x)
+        elif cfg.remat == "dots":
+            fn = jax.checkpoint(
+                lambda lp_, x_: _block(cfg, lp_, x_, positions, win)[:2],
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            )
+            x_new, a = fn(lp, x)
+        else:
+            x_new, a, _ = _block(cfg, lp, x, positions, win)
+        return (x_new, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], windows),
+        unroll=cfg.scan_unroll,
+    )
+    x = L.rms_norm(x, params["final_norm"])
+    return x, aux
+
+
+def _head(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].astype(cfg.adtype).T
+    return params["lm_head"].astype(cfg.adtype)
+
+
+def loss_fn(params, cfg: LMConfig, batch) -> jnp.ndarray:
+    """Next-token CE with sequence-chunked logits (never materializes
+    (B, S, V)). MoE aux loss folded in."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    h, aux = forward(params, cfg, tokens)
+    head = _head(params, cfg)  # (d, V)
+    b, s, d = h.shape
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = s // chunk
+    h = h[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    t = targets[:, : n_chunks * chunk].reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        hc, tc = xs  # (B, chunk, d), (B, chunk)
+        logits = (hc @ head).astype(jnp.float32)  # (B, chunk, V)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32), (h, t), unroll=n_chunks
+    )
+    loss = total / (b * n_chunks * chunk)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_weight * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with stacked KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> L.KVCache:
+    """Stacked over layers: fields have leading (n_layers,) axis."""
+    tmpl = L.init_kv_cache(
+        batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+        dtype=cfg.adtype, quantized=cfg.kv_quant,
+    )
+    return L.KVCache(
+        k=jnp.zeros((cfg.n_layers,) + tmpl.k.shape, tmpl.k.dtype),
+        v=jnp.zeros((cfg.n_layers,) + tmpl.v.shape, tmpl.v.dtype),
+        k_scale=(
+            jnp.ones((cfg.n_layers,) + tmpl.k_scale.shape, jnp.float32)
+            if tmpl.k_scale is not None
+            else None
+        ),
+        v_scale=(
+            jnp.ones((cfg.n_layers,) + tmpl.v_scale.shape, jnp.float32)
+            if tmpl.v_scale is not None
+            else None
+        ),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _scan_layers_cached(params, cfg: LMConfig, x, positions, cache: L.KVCache):
+    windows = cfg.layer_windows()
+    quantized = cache.k_scale is not None  # static
+
+    def body(carry, xs):
+        x, aux = carry
+        if quantized:
+            lp, win, kc, vc, ks, vs = xs
+        else:
+            lp, win, kc, vc = xs
+            ks = vs = None
+        lc = L.KVCache(k=kc, v=vc, k_scale=ks, v_scale=vs, length=cache.length)
+        x_new, a, nc = _block(cfg, lp, x, positions, win, cache=lc)
+        if quantized:
+            out = (nc.k, nc.v, nc.k_scale, nc.v_scale)
+        else:
+            out = (nc.k, nc.v)
+        return (x_new, aux + a), out
+
+    if quantized:
+        xs = (params["layers"], windows, cache.k, cache.v, cache.k_scale, cache.v_scale)
+    else:
+        xs = (params["layers"], windows, cache.k, cache.v)
+    (x, aux), outs = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, unroll=cfg.scan_unroll
+    )
+    if quantized:
+        nk, nv, nks, nvs = outs
+    else:
+        (nk, nv), nks, nvs = outs, None, None
+    new_cache = L.KVCache(
+        k=nk,
+        v=nv,
+        k_scale=nks,
+        v_scale=nvs,
+        length=cache.length + x.shape[1],
+    )
+    return x, aux, new_cache
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray, cache: L.KVCache):
+    """Run the prompt through the model, filling the cache.
+    Returns (last-position logits (B, V), cache)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s)) + cache.length
+    x = params["embed"].astype(cfg.adtype)[tokens] * (cfg.d_model**0.5)
+    x, _, cache = _scan_layers_cached(params, cfg, x, positions, cache)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1] @ _head(params, cfg)).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params, cfg: LMConfig, tokens: jnp.ndarray, cache: L.KVCache):
+    """One-token decode: tokens (B, 1) appended at cache.length.
+    Returns (logits (B, V), new cache)."""
+    b, _ = tokens.shape
+    positions = jnp.broadcast_to(cache.length, (b, 1))
+    x = params["embed"].astype(cfg.adtype)[tokens] * (cfg.d_model**0.5)
+    x, _, cache = _scan_layers_cached(params, cfg, x, positions, cache)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1] @ _head(params, cfg)).astype(jnp.float32)
+    return logits, cache

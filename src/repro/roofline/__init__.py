@@ -1,0 +1,17 @@
+from repro.roofline.analysis import (
+    V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+    model_flops,
+)
+
+__all__ = [
+    "V5E",
+    "HardwareSpec",
+    "RooflineReport",
+    "analyze_compiled",
+    "collective_bytes_from_hlo",
+    "model_flops",
+]

@@ -1,0 +1,284 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_per_chip   / peak_FLOP/s          [s]
+    memory     = HLO_bytes_per_chip   / HBM_bw               [s]
+    collective = collective_bytes_per_chip / link_bw         [s]
+
+Sources: ``compiled.cost_analysis()`` (per-device flops / bytes accessed),
+and the optimized HLO text for collective operand bytes (cost_analysis
+does not expose them).  Hardware constants: TPU v5e.
+
+The "useful-FLOP ratio" compares 6·N·D-style model FLOPs against the
+compiled count — it flags remat recompute and padding waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "HardwareSpec",
+    "V5E",
+    "RooflineReport",
+    "collective_bytes_from_hlo",
+    "analyze_compiled",
+    "model_flops",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float  # bf16 FLOP/s per chip
+    hbm_bw: float  # B/s per chip
+    link_bw: float  # B/s per ICI link
+    hbm_bytes: float  # capacity per chip
+
+
+V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in (optimized, post-SPMD,
+    per-device) HLO text. Returns per-kind byte counts + 'total'."""
+    out: Dict[str, int] = {
+        "all-gather": 0,
+        "all-reduce": 0,
+        "reduce-scatter": 0,
+        "all-to-all": 0,
+        "collective-permute": 0,
+    }
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        # operand shapes appear inside the call parens
+        paren = line[m.end() - 1 :]
+        shapes = _SHAPE_RE.findall(paren)
+        if not shapes:  # fall back to the result shape
+            shapes = _SHAPE_RE.findall(line[: m.end()])
+        out[kind] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    peak_memory_per_chip: float
+    hw: HardwareSpec = V5E
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        total_hlo = self.flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the hard compute roofline we'd achieve if the step
+        ran at its dominant-term time: useful_compute_time / bound_time."""
+        useful_s = self.model_flops_total / (self.chips * self.hw.peak_flops)
+        return useful_s / self.bound_time_s if self.bound_time_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_total": self.model_flops_total,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_memory_per_chip": self.peak_memory_per_chip,
+        }
+
+
+def analyze_compiled(
+    compiled,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    model_flops_total: float,
+    hw: HardwareSpec = V5E,
+) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    mem = compiled.memory_analysis()
+    peak = float(
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0)
+    )
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        coll_bytes_per_chip=coll,
+        compute_s=flops / hw.peak_flops,
+        memory_s=byts / hw.hbm_bw,
+        collective_s=coll["total"] / hw.link_bw,
+        model_flops_total=model_flops_total,
+        peak_memory_per_chip=peak,
+        hw=hw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model FLOPs (the "useful work" yardstick)
+# ---------------------------------------------------------------------------
+
+
+def _lm_attention_flops(cfg, batch: int, s_q: int, s_k: int, train: bool) -> float:
+    """QK + PV matmul FLOPs across layers, honouring sliding windows
+    (gemma3 local layers attend to at most `window` keys).  Square causal
+    attention is halved.  Train multiplies by 3 (fwd + bwd)."""
+    h, hd = cfg.n_heads, cfg.head_dim
+    total = 0.0
+    for i in range(cfg.n_layers):
+        is_global = cfg.window is None or (
+            cfg.global_every and (i + 1) % cfg.global_every == 0
+        )
+        keys = s_k if is_global else min(cfg.window, s_k)
+        per = 2.0 * batch * s_q * keys * h * hd * 2  # two matmuls
+        if s_q == s_k and is_global:
+            per *= 0.5  # causal square
+        total += per
+    return total * (3.0 if train else 1.0)
+
+
+def model_flops(plan, cell) -> float:
+    """Useful-work yardstick: 6·N·D (train) / 2·N·D (inference) plus
+    attention matmul FLOPs, with family-specific N and D."""
+    kind = plan.kind
+    cfg = plan.cfg
+    if hasattr(cfg, "n_active_params"):  # LM
+        n = cfg.n_active_params()
+        if kind == "train":
+            s = cell.extra["seq_len"]
+            d = cell.batch * s
+            return 6.0 * n * d + _lm_attention_flops(cfg, cell.batch, s, s, True)
+        if kind == "prefill":
+            s = cell.extra["seq_len"]
+            d = cell.batch * s
+            return 2.0 * n * d + _lm_attention_flops(cfg, cell.batch, s, s, False)
+        if kind == "decode":
+            # one token per sequence; KV-cache attention reads
+            lk = cell.extra["cache_len"]
+            return 2.0 * n * cell.batch + _lm_attention_flops(
+                cfg, cell.batch, 1, lk, False
+            )
+    if plan.arch == "pna":
+        dh = cfg.d_hidden
+        ex = cell.extra
+        if kind == "train_minibatch":
+            from repro.data.graphs import NeighborSampler
+
+            class _B:
+                fanouts = ex["fanouts"]
+
+            n_nodes, n_edges = NeighborSampler.budget(_B, cell.batch)
+        elif "nodes_per_graph" in ex:
+            n_nodes = cell.batch * ex["nodes_per_graph"]
+            n_edges = cell.batch * ex["edges_per_graph"]
+        else:
+            n_nodes, n_edges = ex["n_nodes"], ex["n_edges"]
+        layers = cfg.n_layers
+        fwd = layers * (2 * n_edges * 2 * dh * dh + n_nodes * 12 * dh * dh * 2)
+        fwd += 2 * n_nodes * cfg.d_feat * dh
+        return 3.0 * fwd if kind.startswith("train") else fwd
+    # recsys: dense compute only (embedding gathers are bytes, not FLOPs)
+    dense_params = {
+        "dien": lambda c: c.n_params() - c.vocab * c.embed_dim,
+        "mind": lambda c: c.n_params() - c.vocab * c.embed_dim,
+        "bert4rec": lambda c: c.n_params() - c.vocab * c.embed_dim,
+        "dcn-v2": lambda c: c.n_params()
+        - c.n_sparse * c.vocab_per_field * c.embed_dim,
+    }[plan.arch](cfg)
+    seq = getattr(cfg, "seq_len", getattr(cfg, "hist_len", 1))
+    per_ex = dense_params * (seq if plan.arch in ("dien", "bert4rec") else 1)
+    if kind == "train":
+        return 6.0 * per_ex * cell.batch
+    if kind == "serve":
+        return 2.0 * per_ex * cell.batch
+    if kind == "retrieval":
+        emb = getattr(cfg, "embed_dim", 16)
+        return 2.0 * per_ex * cell.batch + 2.0 * cell.extra["n_candidates"] * emb
+    return 0.0

@@ -1,0 +1,2 @@
+"""Serving layer: the distributed SeCluD search service, batched request
+scheduling, and the recsys retrieval pipeline with SeCluD pre-filtering."""

@@ -1,0 +1,134 @@
+"""Distributed SeCluD search service.
+
+The paper's two-level query algorithm as a serving system:
+
+  * clusters are sharded over the mesh's data axis (the paper §1:
+    "the resulting clusters are also useful ... for distributing the work
+    over many machines");
+  * the cluster index (term → clusters) is replicated — the paper §3.2
+    argues this replication is affordable, we adopt it;
+  * a query batch is broadcast, every shard intersects the posting
+    segments of its local clusters, counts are combined with one psum.
+
+Two execution paths with the same contract:
+  * ``serve_counts``       — host path (numpy Lookup, exact work metric);
+  * ``make_sharded_step``  — device path: fixed-shape padded segment
+    batches + ``shard_map`` over cluster shards, Pallas/jnp intersection
+    kernels. Used by the serving dry-run and the wall-clock benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.seclud import SecludResult
+from repro.kernels.intersect.ref import PAD
+
+__all__ = ["SearchService", "PackedClusters"]
+
+
+@dataclasses.dataclass
+class PackedClusters:
+    """Device-resident layout: for each (query, cluster-of-query) pair the
+    two posting segments, padded to fixed widths and stacked."""
+
+    short: np.ndarray  # (R, Ls)
+    long: np.ndarray  # (R, Ll)
+    row_query: np.ndarray  # (R,) query id of each row
+    n_queries: int
+
+
+class SearchService:
+    def __init__(self, result: SecludResult):
+        self.res = result
+
+    # -- host path -------------------------------------------------------
+
+    def serve_counts(self, queries: np.ndarray) -> Tuple[np.ndarray, dict]:
+        """Exact per-query result counts via the two-level cluster index."""
+        counts = np.zeros(len(queries), dtype=np.int64)
+        total_work = 0.0
+        for qi, (t, u) in enumerate(queries):
+            docs, work = self.res.cluster_index.query(int(t), int(u))
+            counts[qi] = len(docs)
+            total_work += work["total"]
+        return counts, {"work": total_work}
+
+    # -- device path ------------------------------------------------------
+
+    def pack(self, queries: np.ndarray, pad_to: int = 128) -> PackedClusters:
+        """Build the fixed-shape per-(query, cluster) segment batch."""
+        cidx = self.res.cluster_index
+        docs = cidx.index.post_docs
+        rows_s, rows_l, row_q = [], [], []
+        max_s = max_l = pad_to
+        for qi, (t, u) in enumerate(queries):
+            ct, st, et = cidx.term_segments(int(t))
+            cu, su, eu = cidx.term_segments(int(u))
+            common, it, iu = np.intersect1d(ct, cu, return_indices=True)
+            for c, a, b in zip(common, it, iu):
+                seg_t = docs[st[a] : et[a]]
+                seg_u = docs[su[b] : eu[b]]
+                if len(seg_t) > len(seg_u):
+                    seg_t, seg_u = seg_u, seg_t
+                rows_s.append(seg_t)
+                rows_l.append(seg_u)
+                row_q.append(qi)
+                max_s = max(max_s, len(seg_t))
+                max_l = max(max_l, len(seg_u))
+        r = len(rows_s)
+        max_s = -(-max_s // pad_to) * pad_to
+        max_l = -(-max_l // pad_to) * pad_to
+        short = np.full((max(r, 1), max_s), PAD, np.int32)
+        long = np.full((max(r, 1), max_l), PAD, np.int32)
+        for i, (s, l) in enumerate(zip(rows_s, rows_l)):
+            short[i, : len(s)] = s
+            long[i, : len(l)] = l
+        return PackedClusters(
+            short=short,
+            long=long,
+            row_query=np.asarray(row_q, np.int32) if row_q else np.zeros(1, np.int32),
+            n_queries=len(queries),
+        )
+
+    @staticmethod
+    def device_counts(packed: PackedClusters, mesh: Optional[Mesh] = None):
+        """Intersect all rows on device; segment-sum counts per query.
+        With a mesh, rows are sharded over the data axis and results
+        combined with one psum_scatter-equivalent reduction."""
+        from repro.kernels.intersect.ops import intersect_count
+
+        short = jnp.asarray(packed.short)
+        long = jnp.asarray(packed.long)
+        rq = jnp.asarray(packed.row_query)
+        nq = packed.n_queries
+
+        def local(short, long, rq):
+            c = intersect_count(short, long)
+            return jax.ops.segment_sum(c, rq, num_segments=nq)
+
+        if mesh is None:
+            return local(short, long, rq)
+        rows = short.shape[0]
+        dp = "data"
+        n_data = mesh.shape[dp]
+        pad = (-rows) % n_data
+        if pad:
+            short = jnp.pad(short, ((0, pad), (0, 0)), constant_values=PAD)
+            long = jnp.pad(long, ((0, pad), (0, 0)), constant_values=PAD)
+            rq = jnp.pad(rq, (0, pad))
+        from jax.experimental.shard_map import shard_map
+
+        fn = shard_map(
+            lambda s, l, r: jax.lax.psum(local(s, l, r), dp),
+            mesh=mesh,
+            in_specs=(P(dp, None), P(dp, None), P(dp)),
+            out_specs=P(),
+        )
+        return fn(short, long, rq)

@@ -1,0 +1,13 @@
+"""Training substrate: optimizer, schedules, train-step factory,
+checkpointing, fault tolerance."""
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "CheckpointManager",
+]

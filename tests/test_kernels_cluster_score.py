@@ -1,0 +1,86 @@
+import numpy as np
+import pytest
+
+from repro.kernels.cluster_score.ops import cluster_scores, embedding_bag
+from repro.kernels.cluster_score.ref import cluster_scores_ref
+
+
+def _inputs(rng, n, l, tc, k, pad_frac=0.3):
+    ell = rng.integers(0, tc, size=(n, l)).astype(np.int32)
+    pad = rng.random((n, l)) < pad_frac
+    ell[pad] = tc  # pad slot
+    p = rng.random(tc).astype(np.float32)
+    tables = rng.standard_normal((tc, k)).astype(np.float32)
+    return ell, p, tables
+
+
+def _brute(ell, p, tables):
+    n, l = ell.shape
+    tc, k = tables.shape
+    out = np.zeros((n, k), np.float64)
+    for d in range(n):
+        for t in ell[d]:
+            if t < tc:
+                out[d] += p[t] * tables[t]
+    return out.astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "n,l,tc,k",
+    [(4, 8, 32, 4), (16, 128, 128, 8), (10, 50, 300, 33), (32, 64, 1024, 128)],
+)
+def test_scores_match_brute(n, l, tc, k):
+    rng = np.random.default_rng(n + l + tc + k)
+    ell, p, tables = _inputs(rng, n, l, tc, k)
+    want = _brute(ell, p, tables)
+    got_ref = np.asarray(cluster_scores_ref(ell, p, tables))
+    got_kern = np.asarray(cluster_scores(ell, p, tables, force_kernel=True))
+    np.testing.assert_allclose(got_ref, want, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(got_kern, want, rtol=2e-5, atol=1e-5)
+
+
+def test_tile_sweep():
+    rng = np.random.default_rng(0)
+    ell, p, tables = _inputs(rng, 8, 40, 200, 16)
+    want = _brute(ell, p, tables)
+    for bd, tt, lc in [(8, 64, 64), (16, 128, 128), (8, 256, 32)]:
+        got = np.asarray(
+            cluster_scores(
+                ell, p, tables, block_d=bd, tile_t=tt, chunk_l=lc, force_kernel=True
+            )
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+def test_all_pad():
+    tc, k = 64, 8
+    ell = np.full((4, 16), tc, np.int32)
+    p = np.ones(tc, np.float32)
+    tables = np.ones((tc, k), np.float32)
+    got = np.asarray(cluster_scores(ell, p, tables, force_kernel=True))
+    np.testing.assert_array_equal(got, 0.0)
+
+
+def test_duplicate_terms_accumulate():
+    tc, k = 16, 4
+    ell = np.array([[3, 3, 3, tc]], np.int32)
+    p = np.arange(1, tc + 1, dtype=np.float32)
+    tables = np.eye(tc, k, dtype=np.float32)
+    got = np.asarray(cluster_scores(ell, p, tables, force_kernel=True))
+    want = np.zeros((1, k), np.float32)
+    want[0, 3] = 3 * p[3]
+    np.testing.assert_allclose(got, want)
+
+
+def test_embedding_bag_matches_ref():
+    rng = np.random.default_rng(2)
+    ids = rng.integers(0, 100, size=(6, 10)).astype(np.int32)
+    table = rng.standard_normal((100, 12)).astype(np.float32)
+    got = np.asarray(embedding_bag(ids, table))
+    want = table[ids].sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # Weighted variant.
+    w = rng.random((6, 10)).astype(np.float32)
+    got_w = np.asarray(embedding_bag(ids, table, weights=w))
+    want_w = (w[..., None] * table[ids]).sum(axis=1)
+    np.testing.assert_allclose(got_w, want_w, rtol=1e-5, atol=1e-5)

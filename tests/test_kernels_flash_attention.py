@@ -1,0 +1,95 @@
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _qkv(rng, b, h, lq, lk, d, dtype=np.float32):
+    q = rng.standard_normal((b, h, lq, d)).astype(dtype)
+    k = rng.standard_normal((b, h, lk, d)).astype(dtype)
+    v = rng.standard_normal((b, h, lk, d)).astype(dtype)
+    return q, k, v
+
+
+def _brute(q, k, v, causal, window=None):
+    b, h, lq, d = q.shape
+    lk = k.shape[2]
+    s = np.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(d)
+    off = lk - lq
+    i = np.arange(lq)[:, None]
+    j = np.arange(lk)[None, :]
+    mask = np.ones((lq, lk), bool)
+    if causal:
+        mask &= j <= i + off
+    if window is not None:
+        mask &= j > i + off - window
+    s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+@pytest.mark.parametrize(
+    "b,h,lq,lk,d,causal",
+    [
+        (1, 1, 128, 128, 64, True),
+        (2, 2, 128, 128, 64, False),
+        (1, 2, 128, 256, 32, True),  # decode-ish: kv longer than q
+        (1, 1, 256, 256, 128, True),
+    ],
+)
+def test_flash_matches_brute(b, h, lq, lk, d, causal):
+    rng = np.random.default_rng(b + h + lq + lk + d)
+    q, k, v = _qkv(rng, b, h, lq, lk, d)
+    want = _brute(q, k, v, causal)
+    got_ref = np.asarray(attention_ref(q, k, v, causal=causal))
+    got_kern = np.asarray(flash_attention(q, k, v, causal=causal, force_kernel=True))
+    np.testing.assert_allclose(got_ref, want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_kern, want, rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window():
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, 1, 2, 256, 256, 64)
+    for window in (64, 128):
+        want = _brute(q, k, v, True, window=window)
+        got = np.asarray(
+            flash_attention(q, k, v, causal=True, window=window, force_kernel=True)
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_tile_sweep():
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, 1, 1, 256, 512, 64)
+    want = _brute(q, k, v, True)
+    for tq, tk in [(64, 64), (128, 256), (256, 128)]:
+        got = np.asarray(
+            flash_attention(
+                q, k, v, causal=True, tile_q=tq, tile_k=tk, force_kernel=True
+            )
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_bf16():
+    rng = np.random.default_rng(2)
+    import jax.numpy as jnp
+
+    q, k, v = _qkv(rng, 1, 1, 128, 128, 64)
+    qb, kb, vb = (jnp.asarray(x, jnp.bfloat16) for x in (q, k, v))
+    want = _brute(q, k, v, True)
+    got = np.asarray(
+        flash_attention(qb, kb, vb, causal=True, force_kernel=True)
+    ).astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_decode_single_query():
+    """Lq=1 decode shape (tile_q clamps to 1)."""
+    rng = np.random.default_rng(3)
+    q, k, v = _qkv(rng, 2, 4, 1, 512, 64)
+    want = _brute(q, k, v, True)
+    got = np.asarray(flash_attention(q, k, v, causal=True, force_kernel=True))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,97 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.intersect.ops import intersect_count
+from repro.kernels.intersect.ref import PAD, intersect_count_ref
+
+
+def _make_batch(rng, b, ls, ll, universe, skew=False):
+    short = np.full((b, ls), PAD, dtype=np.int32)
+    long = np.full((b, ll), PAD, dtype=np.int32)
+    for r in range(b):
+        ns = rng.integers(0, ls + 1)
+        nl = rng.integers(0, ll + 1)
+        if skew:
+            lo = rng.integers(0, universe // 2)
+            w = max(universe // 8, nl + ns + 1)
+            pool = np.arange(lo, min(lo + w, universe))
+        else:
+            pool = np.arange(universe)
+        s_vals = np.sort(rng.choice(pool, size=min(ns, len(pool)), replace=False))
+        l_vals = np.sort(rng.choice(pool, size=min(nl, len(pool)), replace=False))
+        short[r, : len(s_vals)] = s_vals
+        long[r, : len(l_vals)] = l_vals
+    return short, long
+
+
+def _brute(short, long):
+    out = []
+    for s, l in zip(short, long):
+        out.append(
+            len(np.intersect1d(s[s != int(PAD)], l[l != int(PAD)]))
+        )
+    return np.asarray(out, np.int32)
+
+
+@pytest.mark.parametrize(
+    "b,ls,ll",
+    [(1, 16, 64), (8, 128, 128), (5, 100, 300), (16, 128, 512), (3, 257, 1000)],
+)
+def test_kernel_matches_brute(b, ls, ll):
+    rng = np.random.default_rng(b * 1000 + ls + ll)
+    short, long = _make_batch(rng, b, ls, ll, universe=4 * ll)
+    want = _brute(short, long)
+    got_ref = np.asarray(intersect_count_ref(short, long))
+    got_kern = np.asarray(intersect_count(short, long, force_kernel=True))
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_kern, want)
+
+
+def test_kernel_skewed_clustered_ids():
+    """The reordered-index regime: ids concentrated in cluster ranges."""
+    rng = np.random.default_rng(0)
+    short, long = _make_batch(rng, 8, 128, 384, universe=1 << 16, skew=True)
+    want = _brute(short, long)
+    got = np.asarray(intersect_count(short, long, force_kernel=True))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_tile_sweep():
+    rng = np.random.default_rng(1)
+    short, long = _make_batch(rng, 4, 96, 200, universe=1024)
+    want = _brute(short, long)
+    for ts, tl in [(64, 64), (128, 128), (128, 256)]:
+        got = np.asarray(
+            intersect_count(short, long, tile_s=ts, tile_l=tl, force_kernel=True)
+        )
+        np.testing.assert_array_equal(got, want)
+
+
+def test_all_pad_rows():
+    short = np.full((8, 128), PAD, np.int32)
+    long = np.full((8, 128), PAD, np.int32)
+    got = np.asarray(intersect_count(short, long, force_kernel=True))
+    np.testing.assert_array_equal(got, 0)
+
+
+def test_identical_rows():
+    row = np.arange(0, 256, 2, dtype=np.int32)
+    short = np.tile(row, (8, 1))
+    long = np.tile(row, (8, 1))
+    got = np.asarray(intersect_count(short, long, force_kernel=True))
+    np.testing.assert_array_equal(got, len(row))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_kernel_property(data):
+    universe = data.draw(st.integers(16, 5000))
+    b = data.draw(st.integers(1, 6))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    ls = data.draw(st.integers(1, 150))
+    ll = data.draw(st.integers(1, 400))
+    short, long = _make_batch(rng, b, ls, ll, universe)
+    want = _brute(short, long)
+    got = np.asarray(intersect_count(short, long, force_kernel=True))
+    np.testing.assert_array_equal(got, want)

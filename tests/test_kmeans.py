@@ -1,0 +1,91 @@
+import numpy as np
+import pytest
+
+from repro.core.kmeans import document_grained_pass, kmeans
+from repro.core.multilevel import multilevel_cluster
+from repro.core.objective import cluster_counts, psi_from_counts
+from repro.core.topdown import topdown_cluster
+
+
+def test_kmeans_round_based_improves(small_view):
+    rng = np.random.default_rng(0)
+    init = rng.integers(0, 8, small_view.n_docs)
+    counts0 = cluster_counts(small_view, init, 8)
+    psi0 = psi_from_counts(counts0, small_view.p_freq)
+    res = kmeans(small_view, 8, init_assign=init, doc_grained_below=0)
+    assert res.psi <= psi0
+    assert res.assign.shape == (small_view.n_docs,)
+    assert res.assign.min() >= 0 and res.assign.max() < 8
+    # reported psi matches recomputation
+    counts = cluster_counts(small_view, res.assign, 8)
+    assert np.isclose(psi_from_counts(counts, small_view.p_freq), res.psi)
+
+
+def test_kmeans_psi_history_monotone(small_view):
+    res = kmeans(small_view, 6, doc_grained_below=0, seed=2)
+    h = res.psi_history
+    # Accepted iterations are non-increasing (last entry may be the
+    # rejected proposal).
+    assert all(h[i + 1] <= h[i] + 1e-9 for i in range(len(h) - 2))
+
+
+def test_document_grained_improves(small_view):
+    sub = small_view.subset(np.arange(400))
+    rng = np.random.default_rng(1)
+    init = rng.integers(0, 5, sub.n_docs)
+    counts0 = cluster_counts(sub, init, 5)
+    psi0 = psi_from_counts(counts0, sub.p_freq)
+    res = document_grained_pass(sub, 5, init, max_passes=3)
+    assert res.psi <= psi0 + 1e-9
+    counts = cluster_counts(sub, res.assign, 5)
+    assert np.isclose(psi_from_counts(counts, sub.p_freq), res.psi, rtol=1e-9)
+
+
+def test_document_grained_beats_or_ties_rounds(small_view):
+    """Doc-grained should not oscillate on small inputs (paper §3.2)."""
+    sub = small_view.subset(np.arange(300))
+    init = np.arange(300) % 4
+    r_doc = document_grained_pass(sub, 4, init.copy(), max_passes=5)
+    r_rnd = kmeans(sub, 4, init_assign=init.copy(), doc_grained_below=0, max_iters=5)
+    assert r_doc.psi <= r_rnd.psi * 1.05  # at least comparable
+
+
+def test_no_empty_clusters(small_view):
+    res = kmeans(small_view, 16, doc_grained_below=0, seed=3)
+    sizes = np.bincount(res.assign, minlength=16)
+    assert (sizes > 0).all()
+
+
+def test_multilevel_runs_and_improves(small_view):
+    res = multilevel_cluster(small_view, 8, doc_grained_below=256, seed=0)
+    rng = np.random.default_rng(0)
+    rand = rng.integers(0, 8, small_view.n_docs)
+    psi_rand = psi_from_counts(
+        cluster_counts(small_view, rand, 8), small_view.p_freq
+    )
+    assert res.psi < psi_rand
+
+
+def test_topdown_cluster_count_band(small_view):
+    for k in (8, 32):
+        res = topdown_cluster(small_view, k, doc_grained_below=256, seed=0)
+        assert k <= res.k_actual <= 2 * k + 1
+        sizes = np.bincount(res.assign, minlength=res.k_actual)
+        assert (sizes > 0).all()
+        # Balancing side effect: max cluster is within a small factor of
+        # the ideal size (paper: "this approach balances cluster sizes").
+        assert sizes.max() <= max(4 * small_view.n_docs / k, 8)
+
+
+def test_topdown_better_than_random(small_view):
+    res = topdown_cluster(small_view, 16, doc_grained_below=256, seed=1)
+    k = res.k_actual
+    rng = np.random.default_rng(0)
+    rand = rng.integers(0, k, small_view.n_docs)
+    psi_td = psi_from_counts(
+        cluster_counts(small_view, res.assign, k), small_view.p_freq
+    )
+    psi_rand = psi_from_counts(
+        cluster_counts(small_view, rand, k), small_view.p_freq
+    )
+    assert psi_td < psi_rand

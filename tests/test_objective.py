@@ -1,0 +1,150 @@
+import numpy as np
+import pytest
+
+from repro.core.objective import (
+    assignment_scores,
+    cluster_counts,
+    delta_add_tables,
+    delta_remove_tables,
+    frequent_term_view,
+    psi_from_counts,
+    query_set_cost,
+)
+
+
+def _brute_psi(counts, p):
+    k, tc = counts.shape
+    total = 0.0
+    for i in range(k):
+        for t in range(tc):
+            for u in range(t + 1, tc):
+                total += p[t] * p[u] * min(counts[i, t], counts[i, u])
+    return total
+
+
+def _brute_add_table(counts, p):
+    k, tc = counts.shape
+    out = np.zeros((k, tc))
+    for j in range(k):
+        for t in range(tc):
+            out[j, t] = sum(
+                p[u] for u in range(tc) if u != t and counts[j, u] > counts[j, t]
+            )
+    return out
+
+
+def _brute_remove_table(counts, p):
+    k, tc = counts.shape
+    out = np.zeros((k, tc))
+    for j in range(k):
+        for t in range(tc):
+            out[j, t] = sum(
+                p[u] for u in range(tc) if u != t and counts[j, u] >= counts[j, t]
+            )
+    return out
+
+
+@pytest.fixture(scope="module")
+def tiny(rng=np.random.default_rng(5)):
+    counts = rng.integers(0, 6, size=(3, 12))
+    p = rng.random(12)
+    p /= p.sum()
+    return counts, p
+
+
+def test_psi_matches_bruteforce(tiny):
+    counts, p = tiny
+    assert np.isclose(psi_from_counts(counts, p), _brute_psi(counts, p), rtol=1e-12)
+
+
+def test_psi_with_ties():
+    # All-equal counts: every min is the same value; ties must not break ψ.
+    counts = np.full((2, 5), 3)
+    p = np.full(5, 0.2)
+    want = _brute_psi(counts, p)
+    assert np.isclose(psi_from_counts(counts, p), want, rtol=1e-12)
+
+
+def test_delta_add_table_exact(tiny):
+    counts, p = tiny
+    got = delta_add_tables(counts, p)
+    want = _brute_add_table(counts, p)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_delta_remove_table_exact(tiny):
+    counts, p = tiny
+    got = delta_remove_tables(counts, p)
+    want = _brute_remove_table(counts, p)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_delta_is_psi_difference(tiny):
+    """δ_j⁺(t) must equal ψ(counts + e_jt) − ψ(counts) — the paper's
+    defining identity (§3.2)."""
+    counts, p = tiny
+    tables = delta_add_tables(counts, p)
+    psi0 = psi_from_counts(counts, p)
+    for j in range(counts.shape[0]):
+        for t in range(counts.shape[1]):
+            c2 = counts.copy()
+            c2[j, t] += 1
+            dpsi = psi_from_counts(c2, p) - psi0
+            assert np.isclose(dpsi, p[t] * tables[j, t], rtol=1e-9, atol=1e-12), (
+                f"mismatch at j={j} t={t}"
+            )
+
+
+def test_delta_remove_is_psi_difference(tiny):
+    counts, p = tiny
+    counts = counts + 1  # ensure removable
+    tables = delta_remove_tables(counts, p)
+    psi0 = psi_from_counts(counts, p)
+    for j in range(counts.shape[0]):
+        for t in range(counts.shape[1]):
+            c2 = counts.copy()
+            c2[j, t] -= 1
+            dpsi = psi0 - psi_from_counts(c2, p)
+            assert np.isclose(dpsi, p[t] * tables[j, t], rtol=1e-9, atol=1e-12)
+
+
+def test_view_and_counts(small_corpus, small_p, small_view):
+    v = small_view
+    assert v.tc == 800
+    # rank_of_term inverse relationship
+    for r in (0, 5, 700):
+        assert v.rank_of_term[v.term_of_rank[r]] == r
+    # P is descending in rank
+    assert np.all(np.diff(v.p_freq) <= 1e-15)
+    assign = np.arange(v.n_docs) % 4
+    counts = cluster_counts(v, assign, 4)
+    assert counts.sum() == v.mat.nnz
+    # column sums = total df among frequent terms
+    df = small_corpus.term_doc_freq()[v.term_of_rank]
+    np.testing.assert_array_equal(counts.sum(axis=0), df)
+
+
+def test_assignment_scores_equals_edge_sum(small_view):
+    v = small_view
+    k = 4
+    rng = np.random.default_rng(0)
+    tables = rng.random((k, v.tc))
+    scores = assignment_scores(v, tables)
+    # brute per-doc for a few docs
+    indptr, indices = v.mat.indptr, v.mat.indices
+    for d in (0, 17, 400):
+        ranks = indices[indptr[d] : indptr[d + 1]]
+        want = (v.p_freq[ranks][None, :] * tables[:, ranks]).sum(axis=1)
+        np.testing.assert_allclose(scores[d], want, rtol=1e-10)
+
+
+def test_query_set_cost_single_vs_clustered(small_corpus, small_log):
+    q = small_log.queries[:50]
+    base = query_set_cost(small_corpus, None, 1, q)
+    assign = np.random.default_rng(1).integers(0, 8, small_corpus.n_docs)
+    clustered = query_set_cost(small_corpus, assign, 8, q)
+    # min is superadditive: Σ_i min(x_i, y_i) <= min(Σ_i x_i, Σ_i y_i),
+    # so ANY clustering is at least as cheap as the single-cluster case
+    # under the Phi = min model — the paper's Section-1 example.
+    assert clustered <= base + 1e-9
+    assert base > 0

@@ -1,0 +1,68 @@
+import numpy as np
+
+from repro.roofline.analysis import (
+    V5E,
+    RooflineReport,
+    collective_bytes_from_hlo,
+)
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %p0), replica_groups={}
+  %ag = f32[256,128]{1,0} all-gather(f32[16,128]{1,0} %ar), dimensions={0}
+  %rs = bf16[2,64]{1,0} reduce-scatter(bf16[32,64]{1,0} %x), dimensions={0}
+  %a2a = s8[8,8]{1,0} all-to-all(s8[8,8]{1,0} %y), dimensions={0}
+  %cp-start = f32[4]{0} collective-permute-start(f32[4]{0} %z)
+  %cp-done = f32[4]{0} collective-permute-done(f32[4]{0} %cp-start)
+  %not-a-collective = f32[999]{0} add(f32[999]{0} %p0, f32[999]{0} %p0)
+}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 16 * 128 * 4  # operand, not gathered result
+    assert out["reduce-scatter"] == 32 * 64 * 2
+    assert out["all-to-all"] == 8 * 8 * 1
+    assert out["collective-permute"] == 4 * 4  # -start counted, -done not
+    assert out["total"] == sum(
+        v for k, v in out.items() if k != "total"
+    )
+
+
+def test_collective_parser_ignores_non_collectives():
+    out = collective_bytes_from_hlo("%z = f32[10] add(f32[10] %a, f32[10] %b)")
+    assert out["total"] == 0
+
+
+def test_roofline_report_terms():
+    r = RooflineReport(
+        arch="x", shape="y", mesh="m", chips=256,
+        flops_per_chip=197e12,  # exactly 1 second of compute
+        bytes_per_chip=819e9,  # exactly 1 second of HBM
+        coll_bytes_per_chip={"total": 25e9},  # 0.5 s of link
+        compute_s=1.0, memory_s=1.0, collective_s=0.5,
+        model_flops_total=197e12 * 256,  # all useful
+        peak_memory_per_chip=8e9,
+    )
+    assert r.dominant in ("compute", "memory")
+    assert np.isclose(r.useful_flop_ratio, 1.0)
+    assert np.isclose(r.roofline_fraction, 1.0)
+    d = r.to_dict()
+    assert d["chips"] == 256 and "dominant" in d
+
+
+def test_roofline_dominant_collective():
+    r = RooflineReport(
+        arch="x", shape="y", mesh="m", chips=2,
+        flops_per_chip=1.0, bytes_per_chip=1.0,
+        coll_bytes_per_chip={"total": int(100e9)},
+        compute_s=1e-12, memory_s=1e-12, collective_s=2.0,
+        model_flops_total=1.0, peak_memory_per_chip=1.0,
+    )
+    assert r.dominant == "collective"
+    assert r.bound_time_s == 2.0

@@ -1,0 +1,90 @@
+import numpy as np
+import pytest
+
+from repro.core.seclud import SecludPipeline
+from repro.serve.retrieval import FilteredRetriever, items_as_corpus
+from repro.serve.search_service import SearchService
+
+
+@pytest.fixture(scope="module")
+def service(small_corpus, small_log):
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    res = pipe.fit(small_corpus, k=12, algo="topdown", log=small_log)
+    return small_corpus, res, SearchService(res)
+
+
+def test_serve_counts_lossless(service):
+    corpus, res, svc = service
+    from repro.index.build import build_index
+
+    idx = build_index(corpus)
+    queries = np.array([[int(t), int(u)] for t, u in
+                        np.random.default_rng(0).choice(
+                            np.flatnonzero(corpus.term_doc_freq() > 1), (20, 2))])
+    counts, work = svc.serve_counts(queries)
+    for qi, (t, u) in enumerate(queries):
+        want = len(np.intersect1d(idx.postings(int(t)), idx.postings(int(u))))
+        assert counts[qi] == want
+    assert work["work"] > 0
+
+
+def test_device_counts_match_host(service):
+    corpus, res, svc = service
+    queries = res.cluster_index.index.post_ptr  # any terms; use log instead
+    rng = np.random.default_rng(1)
+    alive = np.flatnonzero(corpus.term_doc_freq() > 1)
+    queries = rng.choice(alive, (16, 2))
+    queries = queries[queries[:, 0] != queries[:, 1]]
+    host_counts, _ = svc.serve_counts(queries)
+    packed = svc.pack(queries)
+    dev = np.asarray(SearchService.device_counts(packed))
+    np.testing.assert_array_equal(dev, host_counts)
+
+
+def test_device_counts_sharded_local_mesh(service):
+    """shard_map path on the local 1xN mesh."""
+    import jax
+    from jax.sharding import Mesh
+
+    corpus, res, svc = service
+    rng = np.random.default_rng(2)
+    alive = np.flatnonzero(corpus.term_doc_freq() > 1)
+    queries = rng.choice(alive, (8, 2))
+    queries = queries[queries[:, 0] != queries[:, 1]]
+    host_counts, _ = svc.serve_counts(queries)
+    mesh = Mesh(np.asarray(jax.devices()).reshape(-1, 1), ("data", "model"))
+    packed = svc.pack(queries)
+    dev = np.asarray(SearchService.device_counts(packed, mesh=mesh))
+    np.testing.assert_array_equal(dev, host_counts)
+
+
+def test_items_as_corpus():
+    attrs = [np.array([1, 5]), np.array([2]), np.array([1, 2, 9])]
+    c = items_as_corpus(attrs, n_attrs=10)
+    assert c.n_docs == 3
+    assert np.array_equal(c.doc(2), [1, 2, 9])
+
+
+def test_filtered_retriever_exact():
+    rng = np.random.default_rng(0)
+    n_items, n_attrs = 3000, 200
+    item_attrs = [
+        np.unique(rng.choice(n_attrs, size=rng.integers(2, 10)))
+        for _ in range(n_items)
+    ]
+    items = items_as_corpus(item_attrs, n_attrs)
+    r = FilteredRetriever(items, k=16, tc=200)
+    a, b = 3, 7
+    got, report = r.filter(a, b)
+    want = [i for i, s in enumerate(item_attrs) if a in s and b in s]
+    assert sorted(got.tolist()) == want
+    assert report.n_filtered == len(want)
+    assert report.filter_work > 0 and report.baseline_work > 0
+
+    emb = rng.standard_normal((n_items, 8)).astype(np.float32)
+    user = rng.standard_normal((1, 8)).astype(np.float32)
+    ids, scores, _ = r.retrieve(lambda c: user @ emb[c].T, a, b, top_k=3)
+    # Top-3 by score among the exact filtered set.
+    all_scores = (user @ emb[want].T)[0]
+    want_top = np.asarray(want)[np.argsort(-all_scores)[:3]]
+    np.testing.assert_array_equal(ids, want_top)

@@ -1,0 +1,43 @@
+import numpy as np
+import pytest
+
+from repro.core.seclud import SecludPipeline
+
+
+@pytest.fixture(scope="module")
+def fitted(small_corpus, small_log):
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    res = pipe.fit(small_corpus, k=8, algo="topdown", log=small_log)
+    return pipe, res
+
+
+def test_fit_shape(fitted, small_corpus):
+    pipe, res = fitted
+    assert res.assign.shape == (small_corpus.n_docs,)
+    assert 8 <= res.k <= 17
+    assert res.psi <= res.psi_single  # clustering never hurts ψ (min model)
+    assert res.ranges[-1] == small_corpus.n_docs
+
+
+def test_evaluate_lossless_and_speedups(fitted, small_corpus, small_log):
+    pipe, res = fitted
+    ev = pipe.evaluate(small_corpus, res, small_log, max_queries=120)
+    # losslessness is asserted inside evaluate(); here check the report.
+    assert ev["S_T"] >= 1.0 - 1e-9
+    assert ev["work_baseline"] > 0
+    assert ev["n_queries"] == 120
+    assert ev["S_C"] > 0 and ev["S_R"] > 0
+
+
+def test_flat_algo_also_works(small_corpus, small_log):
+    pipe = SecludPipeline(tc=400, doc_grained_below=256, seed=0)
+    res = pipe.fit(small_corpus, k=4, algo="flat", log=small_log)
+    assert res.k == 4
+    ev = pipe.evaluate(small_corpus, res, small_log, max_queries=40)
+    assert ev["S_T"] >= 1.0 - 1e-9
+
+
+def test_corpus_probabilities_fallback(small_corpus):
+    pipe = SecludPipeline(tc=400, doc_grained_below=128, seed=0)
+    res = pipe.fit(small_corpus, k=4, algo="topdown")  # no log: corpus stats
+    assert res.k >= 4

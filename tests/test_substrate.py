@@ -1,0 +1,252 @@
+"""Training substrate tests: optimizer, checkpoint, fault tolerance,
+gradient compression, data pipeline determinism, trainer restart."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import PipelineState, RecsysPipeline, TokenPipeline
+from repro.dist.compression import (
+    compress_decompress,
+    compressed_psum_tree,
+    init_error_state,
+)
+from repro.dist.fault_tolerance import (
+    ElasticMesh,
+    StragglerMonitor,
+    plan_mesh_shape,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+
+# -- optimizer ------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(cfg, g, opt, params)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_bf16_moments():
+    cfg = AdamWConfig(lr=0.05, moment_dtype="bfloat16", warmup_steps=0)
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(cfg, params)
+    assert opt["mu"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((4,))}
+    params2, opt2 = adamw_update(cfg, g, opt, params)
+    assert opt2["mu"]["w"].dtype == jnp.bfloat16
+    assert float(params2["w"][0]) < 1.0
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(cosine_schedule(cfg, jnp.float32(0))) == 0.0
+    assert float(cosine_schedule(cfg, jnp.float32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(cosine_schedule(cfg, jnp.float32(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((3,))}
+    opt = adamw_init(cfg, params)
+    huge = {"w": jnp.full((3,), 1e9)}
+    # lr=0 -> params unchanged, but moments reflect the clipped gradient.
+    _, opt2 = adamw_update(cfg, huge, opt, params)
+    gnorm_after = float(jnp.linalg.norm(opt2["mu"]["w"])) / (1 - cfg.b1)
+    assert gnorm_after <= 1.01
+
+
+# -- checkpoint -----------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    state = {
+        "params": {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+        "opt": {"step": jnp.int32(7)},
+        "pipeline_step": np.int64(42),
+    }
+    mgr.save(10, state)
+    assert mgr.latest_step() == 10
+    step, restored = mgr.restore(state)
+    assert step == 10
+    np.testing.assert_array_equal(restored["params"]["a"], state["params"]["a"])
+    assert int(restored["pipeline_step"]) == 42
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    state = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    steps = sorted(mgr._complete())
+    assert steps == [3, 4]
+    # A stale tmp dir from a "crash" is ignored and cleaned.
+    os.makedirs(tmp_path / "ckpt_00000099.tmp123", exist_ok=True)
+    assert mgr.latest_step() == 4
+    mgr.save(5, state)
+    assert not any(".tmp" in n for n in os.listdir(tmp_path))
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = {"x": jnp.arange(4.0)}
+    path = mgr.save(1, state)
+    shard = os.path.join(path, "shard_0.npz")
+    data = dict(np.load(shard))
+    data["x"] = data["x"] + 1
+    np.savez(shard, **data)
+    with pytest.raises(IOError):
+        mgr.restore(state)
+
+
+# -- fault tolerance --------------------------------------------------------
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(n_hosts=4, strikes_to_evict=3)
+    for _ in range(10):
+        mon.record([1.0, 1.0, 1.0, 1.0])
+    verdicts = []
+    for _ in range(3):
+        verdicts = mon.record([1.0, 1.0, 8.0, 1.0])
+    assert any(v.host == 2 and v.evict for v in verdicts)
+    assert mon.evictees() == [2]
+
+
+def test_straggler_monitor_tolerates_noise():
+    mon = StragglerMonitor(n_hosts=2)
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        out = mon.record(list(1.0 + 0.05 * rng.random(2)))
+    assert mon.evictees() == []
+
+
+def test_plan_mesh_shape():
+    assert plan_mesh_shape(512, 16, prefer_pods=2) == ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_mesh_shape(256, 16) == ((16, 16), ("data", "model"))
+    # Losing 16 devices: 496 // 16 = 31 data rows.
+    assert plan_mesh_shape(496, 16) == ((31, 16), ("data", "model"))
+    with pytest.raises(ValueError):
+        plan_mesh_shape(8, 16)
+
+
+def test_elastic_remesh_local():
+    em = ElasticMesh(model_parallel=1)
+    mesh = em.remesh()
+    assert mesh.devices.size >= 1
+    assert em.epoch == 1
+
+
+# -- gradient compression ----------------------------------------------------
+
+
+def test_error_feedback_invariant():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(100).astype(np.float32))
+    err = jnp.zeros_like(x)
+    deq, err2 = compress_decompress(x, err)
+    np.testing.assert_allclose(np.asarray(deq + err2), np.asarray(x), rtol=1e-5, atol=1e-6)
+
+
+def test_error_feedback_accumulates_to_truth():
+    """Over many steps, the sum of transmitted values converges to the sum
+    of true values (nothing is systematically lost)."""
+    rng = np.random.default_rng(1)
+    err = jnp.zeros((50,))
+    sent = jnp.zeros((50,))
+    true = jnp.zeros((50,))
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(50).astype(np.float32)) * 1e-3
+        deq, err = compress_decompress(g, err)
+        sent = sent + deq
+        true = true + g
+    np.testing.assert_allclose(np.asarray(sent), np.asarray(true), atol=1e-4)
+
+
+def test_compressed_psum_tree_no_axis():
+    grads = {"a": jnp.ones((8,)), "b": {"c": jnp.full((3,), 2.0)}}
+    err = init_error_state(grads)
+    out, err2 = compressed_psum_tree(grads, err, axis_name=None)
+    np.testing.assert_allclose(np.asarray(out["a"]), 1.0, rtol=1e-2)
+    assert jax.tree.structure(err2) == jax.tree.structure(grads)
+
+
+# -- data pipeline -----------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_stateless():
+    p = TokenPipeline(vocab_size=100, seq_len=16, batch_per_shard=4, seed=3)
+    s5 = PipelineState(step=5)
+    b1 = p.batch(s5, shard=0)
+    b2 = p.batch(s5, shard=0)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = p.batch(PipelineState(step=6), shard=0)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    b4 = p.batch(s5, shard=1)
+    assert not np.array_equal(b1["tokens"], b4["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_recsys_pipeline_fields():
+    p = RecsysPipeline(n_dense=5, n_fields=3, vocab_size=50, hist_len=7,
+                       batch_per_shard=6, seed=0)
+    b = p.batch(PipelineState(0))
+    assert b["dense"].shape == (6, 5)
+    assert b["sparse_ids"].shape == (6, 3)
+    assert b["hist_ids"].shape == (6, 7)
+    assert set(np.unique(b["label"])) <= {0.0, 1.0}
+    assert (b["sparse_ids"] >= 0).all() and (b["sparse_ids"] < 50).all()
+
+
+# -- trainer restart ----------------------------------------------------------
+
+
+def test_trainer_checkpoint_restart(tmp_path):
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    vocab, seq = 64, 16
+    pipe = TokenPipeline(vocab_size=vocab, seq_len=seq, batch_per_shard=4, seed=0)
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "emb": jax.random.normal(k1, (vocab, 16)) * 0.1,
+            "out": jax.random.normal(k2, (16, vocab)) * 0.1,
+        }
+
+    def loss_fn(params, batch):
+        h = params["emb"][batch["tokens"]]
+        logits = h @ params["out"]
+        lse = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, batch["targets"][..., None], -1)[..., 0]
+        return (lse - gold).mean()
+
+    cfg = TrainerConfig(total_steps=6, ckpt_every=3, log_every=100,
+                        ckpt_dir=str(tmp_path))
+    t1 = Trainer(loss_fn, init_fn, pipe, cfg)
+    t1.run()
+    losses_full = [l for _, l, _ in t1.history]
+
+    # Second trainer resumes from step 3's checkpoint... but we saved at
+    # 3 and 6; simulate crash after step 3 by removing the later ckpt.
+    import shutil
+
+    shutil.rmtree(tmp_path / "ckpt_00000006")
+    t2 = Trainer(loss_fn, init_fn, pipe, cfg)
+    t2.run()
+    # Resumed steps are 3..5 and reproduce the original losses exactly
+    # (deterministic pipeline + identical state).
+    resumed = [l for _, l, _ in t2.history]
+    np.testing.assert_allclose(resumed, losses_full[3:], rtol=1e-5)

@@ -1,0 +1,38 @@
+"""End-to-end behaviour of the paper's system: corpus -> clustering ->
+three query algorithms -> serving -> retrieval, losslessness throughout,
+plus the adaptive symmetric Lookup (paper §6 future work)."""
+
+import numpy as np
+
+from repro.core.seclud import SecludPipeline
+from repro.index.lookup import adaptive_intersect, lookup_work
+from repro.serve.search_service import SearchService
+
+
+def test_end_to_end_system(small_corpus, small_log):
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    res = pipe.fit(small_corpus, k=10, algo="topdown", log=small_log)
+    report = pipe.evaluate(small_corpus, res, small_log, max_queries=60)
+    assert report["S_T"] >= 1.0 - 1e-9  # clustering never hurts psi
+    # Serving returns the same counts as the work-metric path.
+    svc = SearchService(res)
+    q = small_log.queries[:16]
+    counts, _ = svc.serve_counts(q)
+    dev = np.asarray(SearchService.device_counts(svc.pack(q)))
+    np.testing.assert_array_equal(counts, dev)
+
+
+def test_adaptive_lookup_exact_and_cheap(rng):
+    universe = 1 << 14
+    for trial in range(10):
+        r = np.random.default_rng(trial)
+        # Skewed lists (the clustered regime the adaptation targets).
+        lo1, lo2 = r.integers(0, universe // 2, 2)
+        a = np.unique(r.integers(lo1, lo1 + 2000, 300)).astype(np.int32)
+        b = np.unique(r.integers(lo2, lo2 + 4000, 1500)).astype(np.int32)
+        want = np.intersect1d(a, b)
+        got, w_ad = adaptive_intersect(a, b, universe)
+        assert np.array_equal(got, want)
+        _, w_fix = lookup_work(a, b, universe)
+        # Never dramatically worse than the one-directional lookup.
+        assert w_ad["total"] <= 2 * w_fix["total"] + 16
