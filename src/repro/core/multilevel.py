@@ -13,7 +13,7 @@ The base case and small levels use the document-grained update mode
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -36,9 +36,17 @@ def multilevel_cluster(
     min_rel_improvement: float = 0.01,
     doc_grained_below: int = 2_048,
     seed: int = 0,
+    kmeans_fn: Optional[Callable[..., KMeansResult]] = None,
     _depth: int = 0,
 ) -> KMeansResult:
-    """Recursive ε-sampling initialization + K-means at every level."""
+    """Recursive ε-sampling initialization + K-means at every level.
+
+    ``kmeans_fn`` replaces the host K-means at every level — pass
+    ``repro.dist.cluster_dist.distributed_kmeans_fn(mesh)`` to run the
+    large levels mesh-sharded.  It must accept the keyword signature of
+    :func:`repro.core.kmeans.kmeans`.
+    """
+    solve = kmeans_fn or kmeans
     n = view.n_docs
     rng = np.random.default_rng(seed + 1_000_003 * _depth)
     base = max(k, doc_grained_below // 2)
@@ -49,7 +57,7 @@ def multilevel_cluster(
         # for |D| == k this is exactly "one document per cluster").
         init = np.empty(n, dtype=np.int64)
         init[rng.permutation(n)] = np.arange(n) % k
-        return kmeans(
+        return solve(
             view,
             k,
             init_assign=init,
@@ -69,6 +77,7 @@ def multilevel_cluster(
         min_rel_improvement=min_rel_improvement,
         doc_grained_below=doc_grained_below,
         seed=seed,
+        kmeans_fn=kmeans_fn,
         _depth=_depth + 1,
     )
 
@@ -80,7 +89,7 @@ def multilevel_cluster(
     # Keep the sample's assignments (they were optimized at this k).
     init[sample_ids] = sub_res.assign
 
-    return kmeans(
+    return solve(
         view,
         k,
         init_assign=init,

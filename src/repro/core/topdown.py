@@ -14,7 +14,7 @@ per-level cost is O(χ·N_level) and the total O(χ·N·log_χ k).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -40,7 +40,12 @@ def topdown_cluster(
     min_rel_improvement: float = 0.01,
     doc_grained_below: int = 2_048,
     seed: int = 0,
+    kmeans_fn: Optional[Callable] = None,
 ) -> TopDownResult:
+    """``kmeans_fn`` is forwarded to every ``multilevel_cluster`` split —
+    pass ``repro.dist.cluster_dist.distributed_kmeans_fn(mesh)`` to solve
+    the big top-level splits on the mesh while small recursion leaves stay
+    on the host."""
     n_total = view.n_docs
     leaf_size = n_total / max(k, 1)
     next_cluster = 0
@@ -68,6 +73,7 @@ def topdown_cluster(
             min_rel_improvement=min_rel_improvement,
             doc_grained_below=doc_grained_below,
             seed=int(rng.integers(0, 2**31)),
+            kmeans_fn=kmeans_fn,
         )
         n_splits += 1
         pieces = 0

@@ -1,0 +1,95 @@
+"""Error-feedback int8 gradient compression and the compressed all-reduce.
+
+The paper's compression section is about posting lists; this is the same
+bandwidth argument applied to the *training* side of the system: gradients
+cross the slowest links (inter-host, inter-pod), so an int8 wire format
+with error feedback cuts all-reduce bytes 4× at no asymptotic loss —
+
+    v_t   = g_t + e_{t-1}          (fold in what was previously dropped)
+    q_t   = Q(v_t)                 (symmetric int8, per-tensor scale)
+    e_t   = v_t − deq(q_t)         (what this step drops)
+
+so the cumulative transmitted signal Σ deq(q_t) equals Σ g_t − e_T: nothing
+is ever systematically lost (the invariant ``deq + e_t == v_t`` holds
+exactly in fp32, and ``|e_t| ≤ scale/2`` stays bounded).
+
+``compressed_psum_tree`` is the collective built from it: quantize each
+leaf, share one scale per leaf via ``pmax``, psum the int8 payload (as
+int32 — the wire format is int8, the reduction must not saturate), and
+dequantize.  With ``axis_name=None`` it degrades to local
+quantize/dequantize, which is what single-host tests exercise.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_decompress", "init_error_state", "compressed_psum_tree"]
+
+
+def _quantize(v: jnp.ndarray, axis_name: Optional[str] = None):
+    """Symmetric per-tensor int8; the scale is pmax-shared when reducing
+    over an axis so every participant uses the same grid."""
+    amax = jnp.max(jnp.abs(v))
+    if axis_name is not None:
+        amax = jax.lax.pmax(amax, axis_name)
+    scale = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(v / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(
+    x: jnp.ndarray, err: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One error-feedback round trip for a single tensor.
+
+    Returns ``(deq, new_err)`` with ``deq + new_err == x + err`` exactly
+    (in fp32): the quantization error is carried, never dropped.
+    """
+    v = x.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = _quantize(v)
+    deq = q.astype(jnp.float32) * scale
+    return deq, v - deq
+
+
+def init_error_state(grads: Any) -> Any:
+    """Zero error-feedback state matching a gradient tree."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum_tree(
+    grads: Any, err: Any, axis_name: Optional[str] = None
+) -> Tuple[Any, Any]:
+    """Compressed all-reduce over a gradient tree.
+
+    Inside ``shard_map``/``pmap`` pass the reduction axis name; the result
+    is the *sum* over the axis (divide by the axis size for a mean, as the
+    caller's optimizer convention dictates).  With ``axis_name=None`` the
+    tree is quantized and dequantized locally — same wire format, no
+    collective — which keeps a single code path for 1-host smoke runs.
+
+    Returns ``(reduced_tree, new_err_tree)``.
+    """
+
+    def one(g, e):
+        v = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, scale = _quantize(v, axis_name)
+        deq_local = q.astype(jnp.float32) * scale
+        new_err = v - deq_local
+        if axis_name is None:
+            return deq_local, new_err
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return total.astype(jnp.float32) * scale, new_err
+
+    # Flatten/unflatten rather than a tree_map of pairs: a pair-tree can't
+    # be picked apart with is_leaf when the gradient tree itself contains
+    # tuple nodes.
+    leaves_g, treedef = jax.tree.flatten(grads)
+    leaves_e = jax.tree.leaves(err)
+    pairs = [one(g, e) for g, e in zip(leaves_g, leaves_e)]
+    out = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_err = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return out, new_err

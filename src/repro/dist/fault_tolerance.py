@@ -1,0 +1,161 @@
+"""Fault tolerance for multi-host runs: straggler detection, mesh-shape
+planning under device loss, and elastic re-meshing.
+
+The serving/training loops this repo grows toward run on hundreds of
+chips; at that scale a slow or dead host is the common case, not the
+exception.  Three pieces:
+
+* :class:`StragglerMonitor` — per-host step-time tracking against the
+  median of the other hosts; ``strikes_to_evict`` *consecutive* misses of
+  the ``deadline_factor × median`` deadline flags the host for eviction
+  (consecutive, so transient GC/compile hiccups don't evict anyone).
+* :func:`plan_mesh_shape` — the largest ``("data", "model")`` (optionally
+  ``("pod", "data", "model")``) mesh shape that fits ``n_devices`` while
+  keeping the model-parallel degree intact: losing a host shrinks the data
+  axis, never the model axis (a model shard is not droppable).
+* :class:`ElasticMesh` — applies the plan to the currently-live devices and
+  counts re-mesh epochs, so a training loop can rebuild its jit'd step
+  when membership changes and checkpoint-restore into the new world size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Verdict", "StragglerMonitor", "plan_mesh_shape", "ElasticMesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    host: int
+    slow: bool  # missed the deadline on this record
+    strikes: int  # consecutive misses so far
+    evict: bool  # strikes reached the eviction threshold
+
+
+class StragglerMonitor:
+    """Flags hosts whose step time persistently exceeds the deadline.
+
+    ``record(step_times)`` takes one wall-clock step duration per host and
+    returns a verdict per host.  The deadline is
+    ``deadline_factor × median(other hosts' times)`` — with a single host
+    there is no reference population and nothing is ever flagged.
+    """
+
+    def __init__(
+        self,
+        n_hosts: int,
+        deadline_factor: float = 1.5,
+        strikes_to_evict: int = 3,
+    ):
+        if n_hosts < 1:
+            raise ValueError("n_hosts must be >= 1")
+        self.n_hosts = n_hosts
+        self.deadline_factor = float(deadline_factor)
+        self.strikes_to_evict = int(strikes_to_evict)
+        self._strikes = np.zeros(n_hosts, dtype=np.int64)
+        self._evicted: set = set()
+        self.n_records = 0
+
+    def record(self, step_times: Sequence[float]) -> List[Verdict]:
+        times = np.asarray(step_times, dtype=np.float64)
+        if times.shape != (self.n_hosts,):
+            raise ValueError(
+                f"expected {self.n_hosts} step times, got shape {times.shape}"
+            )
+        self.n_records += 1
+        verdicts = []
+        for h in range(self.n_hosts):
+            others = [
+                times[i]
+                for i in range(self.n_hosts)
+                if i != h and i not in self._evicted
+            ]
+            slow = bool(
+                others and times[h] > self.deadline_factor * float(np.median(others))
+            )
+            self._strikes[h] = self._strikes[h] + 1 if slow else 0
+            if self._strikes[h] >= self.strikes_to_evict:
+                self._evicted.add(h)
+            verdicts.append(
+                Verdict(
+                    host=h,
+                    slow=slow,
+                    strikes=int(self._strikes[h]),
+                    evict=h in self._evicted,
+                )
+            )
+        return verdicts
+
+    def evictees(self) -> List[int]:
+        """Hosts flagged for eviction, ascending."""
+        return sorted(self._evicted)
+
+
+def plan_mesh_shape(
+    n_devices: int,
+    model_parallel: int,
+    prefer_pods: Optional[int] = None,
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest mesh shape fitting ``n_devices`` at a fixed model degree.
+
+    The data axis absorbs device loss (``n // model_parallel`` rows); the
+    model axis never shrinks — a model shard holds state no other host
+    has.  With ``prefer_pods`` the result carries a leading pod axis when
+    at least one full data row fits per pod.
+    """
+    if model_parallel < 1:
+        raise ValueError("model_parallel must be >= 1")
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot hold one model-parallel group of "
+            f"{model_parallel}"
+        )
+    if prefer_pods and prefer_pods > 1:
+        data = n_devices // (prefer_pods * model_parallel)
+        if data >= 1:
+            return (prefer_pods, data, model_parallel), ("pod", "data", "model")
+    return (n_devices // model_parallel, model_parallel), ("data", "model")
+
+
+class ElasticMesh:
+    """Rebuilds the mesh from the currently-live devices.
+
+    Every ``remesh()`` bumps ``epoch`` — the trainer uses the epoch to know
+    its jit'd step (whose shardings bake in the old mesh) must be rebuilt
+    and the pipeline resumed from the last checkpoint at the new world
+    size.
+    """
+
+    def __init__(
+        self, model_parallel: int = 1, prefer_pods: Optional[int] = None
+    ):
+        self.model_parallel = int(model_parallel)
+        self.prefer_pods = prefer_pods
+        self.epoch = 0
+        self.mesh = None
+        self._excluded_hosts: set = set()
+
+    def exclude_host(self, process_index: int) -> None:
+        """Drop a host (e.g. a StragglerMonitor evictee) from future meshes."""
+        self._excluded_hosts.add(int(process_index))
+
+    def remesh(self, devices: Optional[Sequence] = None):
+        """Build the largest valid mesh from the live, non-excluded devices."""
+        import jax
+        from jax.sharding import Mesh
+
+        devices = list(devices if devices is not None else jax.devices())
+        devices = [
+            d for d in devices if d.process_index not in self._excluded_hosts
+        ]
+        shape, axes = plan_mesh_shape(
+            len(devices), self.model_parallel, self.prefer_pods
+        )
+        n_used = int(np.prod(shape))
+        self.mesh = Mesh(np.asarray(devices[:n_used]).reshape(shape), axes)
+        self.epoch += 1
+        return self.mesh

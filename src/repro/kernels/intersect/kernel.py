@@ -29,6 +29,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names this TPUCompilerParams; keep one alias for both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 from repro.kernels.intersect.ref import PAD
 
 __all__ = ["intersect_count_kernel", "PAD"]
@@ -98,7 +101,7 @@ def intersect_count_kernel(
         ],
         out_specs=pl.BlockSpec((block_q, 1), lambda i, s: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -28,6 +28,7 @@ import traceback
 import jax
 
 from repro.configs.registry import ARCH_NAMES, get_arch
+from repro.dist import sharding as sh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell, cost_scale, probe_overrides, probe_plan
 from repro.roofline.analysis import (
@@ -43,7 +44,7 @@ def _compile_costs(spec, shape_name, mesh, extra_overrides):
     """Compile one probe config and return (flops, bytes, coll dict)."""
     plan = build_cell(spec, shape_name, mesh, extra_overrides)
     ins, outs = plan.shardings(mesh)
-    jax.sharding.set_mesh(mesh)  # also sets the abstract mesh (shard_map MoE)
+    sh.set_mesh(mesh)  # also sets the ambient mesh (shard_map MoE)
     compiled = (
         jax.jit(plan.step, in_shardings=ins, out_shardings=outs,
                 donate_argnums=plan.donate)
@@ -70,7 +71,7 @@ def run_cell(spec, shape_name: str, mesh, mesh_name: str, verbose: bool = True):
     t0 = time.perf_counter()
     plan = build_cell(spec, shape_name, mesh)
     ins, outs = plan.shardings(mesh)
-    jax.sharding.set_mesh(mesh)  # also sets the abstract mesh (shard_map MoE)
+    sh.set_mesh(mesh)  # also sets the ambient mesh (shard_map MoE)
     jitted = jax.jit(plan.step, in_shardings=ins, out_shardings=outs,
                      donate_argnums=plan.donate)
     lowered = jitted.lower(*plan.in_structs)

@@ -22,6 +22,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.dist.sharding import get_active_mesh
+
 __all__ = [
     "rms_norm",
     "dense_init",
@@ -317,7 +319,7 @@ def _flash_decode_applicable(cache: KVCache, batch: int) -> bool:
     """Use the split-K shard_map decode when traced under a mesh whose
     'model' axis divides the cache sequence dim (and 'data' divides the
     batch, or batch == 1 and the data axes join the sequence split)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_active_mesh()
     if mesh is None or "model" not in mesh.axis_names or mesh.shape["model"] < 2:
         return False
     s_len = cache.k.shape[1]
@@ -350,7 +352,7 @@ def _flash_decode(q, k_new, v_new, cache: KVCache, window=None):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_active_mesh()
     b, _, hq, d = q.shape
     s_len, hkv = cache.k.shape[1], cache.k.shape[2]
     dp = tuple(a for a in mesh.axis_names if a != "model")
@@ -599,7 +601,7 @@ def moe_apply(
     'model' combines the outputs.  (This replaced an XLA-chosen schedule
     that all-gathered the full dispatch buffers; see EXPERIMENTS.md §Perf.)
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_active_mesh()
     if (
         mesh is not None
         and "model" in mesh.axis_names

@@ -25,9 +25,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.seclud import SecludResult
+from repro.dist import sharding as sh
 from repro.kernels.intersect.ref import PAD
 
 __all__ = ["SearchService", "PackedClusters"]
@@ -115,10 +116,12 @@ class SearchService:
 
         if mesh is None:
             return local(short, long, rq)
-        rows = short.shape[0]
-        dp = "data"
-        n_data = mesh.shape[dp]
-        pad = (-rows) % n_data
+        # Row sharding over ALL data axes (pod included on multi-pod
+        # meshes) comes from the distribution substrate, so serving and
+        # training agree on what "data-parallel" means.
+        dp_axes = sh.batch_axes(mesh)
+        dp = sh.data_spec(mesh)
+        pad = sh.shard_rows(short.shape[0], mesh)
         if pad:
             short = jnp.pad(short, ((0, pad), (0, 0)), constant_values=PAD)
             long = jnp.pad(long, ((0, pad), (0, 0)), constant_values=PAD)
@@ -126,7 +129,7 @@ class SearchService:
         from jax.experimental.shard_map import shard_map
 
         fn = shard_map(
-            lambda s, l, r: jax.lax.psum(local(s, l, r), dp),
+            lambda s, l, r: jax.lax.psum(local(s, l, r), dp_axes),
             mesh=mesh,
             in_specs=(P(dp, None), P(dp, None), P(dp)),
             out_specs=P(),

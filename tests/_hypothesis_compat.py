@@ -1,0 +1,109 @@
+"""Property-test shim: real hypothesis when installed, a tiny deterministic
+fallback otherwise.
+
+CI installs hypothesis from the pinned dependency set and gets full
+shrinking/replay behaviour.  Minimal environments (like the bare container
+this repo is grown in) still *run* every property test — the fallback draws
+``max_examples`` pseudo-random examples from a seeded generator, so the
+tests keep their coverage, deterministically, just without shrinking.
+
+Only the strategy surface this test-suite uses is implemented:
+``integers``, ``lists``, ``sampled_from``, ``data``.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised on CI where hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example_from(self._rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                out = [elements.example_from(rng) for _ in range(n)]
+                if unique:
+                    seen = list(dict.fromkeys(out))
+                    while len(seen) < min_size:
+                        v = elements.example_from(rng)
+                        if v not in seen:
+                            seen.append(v)
+                    out = seen
+                return out
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _DataObject(rng))
+
+    class settings:  # noqa: N801
+        def __init__(self, max_examples=20, deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
+
+    def given(*strats):
+        def deco(fn):
+            def runner(**fixture_kwargs):
+                n = getattr(runner, "_max_examples", 20)
+                seed0 = zlib.crc32(f"{fn.__module__}.{fn.__name__}".encode())
+                for i in range(n):
+                    rng = np.random.default_rng(seed0 + i)
+                    drawn = [s.example_from(rng) for s in strats]
+                    fn(*drawn, **fixture_kwargs)
+
+            # Hide the strategy-bound (leading positional) params so pytest
+            # does not try to resolve them as fixtures; keep any trailing
+            # fixture params visible.
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[len(strats):]
+            runner.__signature__ = sig.replace(parameters=params)
+            runner.__name__ = fn.__name__
+            runner.__module__ = fn.__module__
+            runner.__doc__ = fn.__doc__
+            runner._max_examples = getattr(fn, "_max_examples", 20)
+            return runner
+
+        return deco
+
+
+st = strategies
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

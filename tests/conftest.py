@@ -1,9 +1,32 @@
+import os
+
+# Must be set before jax first initializes its backend: the mesh tests
+# (e.g. the (4,2) mesh in test_cluster_dist.py, (2,4) in test_flash_decode)
+# need >= 8 devices, and CI runners are CPU-only.  setdefault so an outer
+# environment (TPU runs) can still override.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
 import numpy as np
 import pytest
 
 from repro.data.corpus import CorpusSpec, synth_corpus
 from repro.data.query_log import synth_query_log, term_probabilities
 from repro.core.objective import frequent_term_view
+
+try:  # hypothesis is a pinned dev dependency; keep working without it
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci",
+        deadline=None,  # CI runners have noisy timing; never flake on it
+        max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    if os.environ.get("CI"):
+        settings.load_profile("ci")
+except ModuleNotFoundError:
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -11,6 +11,8 @@ import pytest
 from repro.configs.registry import ARCH_NAMES, get_arch
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
+pytestmark = pytest.mark.slow  # per-arch forward/train/decode smoke across all 9 configs (~90 s)
+
 LM_ARCHS = [a for a in ARCH_NAMES if get_arch(a).family == "lm"]
 RECSYS_ARCHS = [a for a in ARCH_NAMES if get_arch(a).family == "recsys"]
 

@@ -1,7 +1,7 @@
 """Batched query layout + adaptive lookup property tests."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
 
 from repro.index.batched import batch_queries, count_intersections_jnp
 from repro.index.build import build_index

@@ -7,6 +7,7 @@ import sys
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # skip TPU probing on CI hosts
 import jax, numpy as np
 from repro.data.corpus import CorpusSpec, synth_corpus
 from repro.data.query_log import synth_query_log, term_probabilities

@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
 
 from repro.index.build import build_index
 from repro.index.compress import (

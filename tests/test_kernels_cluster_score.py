@@ -4,6 +4,8 @@ import pytest
 from repro.kernels.cluster_score.ops import cluster_scores, embedding_bag
 from repro.kernels.cluster_score.ref import cluster_scores_ref
 
+pytestmark = pytest.mark.slow  # Pallas kernel sweeps in interpret mode
+
 
 def _inputs(rng, n, l, tc, k, pad_frac=0.3):
     ell = rng.integers(0, tc, size=(n, l)).astype(np.int32)

@@ -4,6 +4,8 @@ import pytest
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
+pytestmark = pytest.mark.slow  # Pallas kernel sweeps in interpret mode
+
 
 def _qkv(rng, b, h, lq, lk, d, dtype=np.float32):
     q = rng.standard_normal((b, h, lq, d)).astype(dtype)

@@ -1,9 +1,11 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
 
 from repro.kernels.intersect.ops import intersect_count
 from repro.kernels.intersect.ref import PAD, intersect_count_ref
+
+pytestmark = pytest.mark.slow  # Pallas kernel sweeps in interpret mode
 
 
 def _make_batch(rng, b, ls, ll, universe, skew=False):

@@ -5,11 +5,17 @@ devices so the main test process keeps its single-device view."""
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # 8-device subprocess with its own jax startup
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # skip TPU probing on CI hosts
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.dist import sharding as sh
 from repro.models import layers as L
 
 key = jax.random.key(0)
@@ -21,7 +27,7 @@ x = jax.random.normal(jax.random.key(1), (t, d), jnp.float32)
 out_ref, aux_ref = L._moe_apply_dense(p, x, k, 8.0, "silu")
 
 mesh = jax.make_mesh((2, 4), ("data", "model"))
-jax.sharding.set_mesh(mesh)
+sh.set_mesh(mesh)
 fn = jax.jit(lambda p_, x_: L.moe_apply(p_, x_, k, 8.0, "silu"))
 lowered = fn.lower(
     jax.device_put(p, NamedSharding(mesh, P())),
