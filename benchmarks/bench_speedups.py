@@ -1,17 +1,48 @@
 """Paper Figures 2, 3 & 5: speedups S_T / S_C / S_R vs number of
-clusters k, for flat-multilevel (FM) and TopDown (TD) clustering."""
+clusters k, for flat-multilevel (FM) and TopDown (TD) clustering —
+plus the wall-clock row of the batched two-level query engine vs the
+per-query Python loop (``batched_engine``, part of the CI smoke set)."""
+
+import numpy as np
 
 from benchmarks.common import corpus_and_log, row, timed
+from repro.core.batched_query import batched_counts, batched_query
 from repro.core.seclud import SecludPipeline
+
+
+def _batched_engine_row(corpus_name, res, log, n_bench):
+    """Wall-clock: per-query ``ClusterIndex.query`` loop vs the batched
+    engine (host exact path + device count path) on the same queries."""
+    cidx = res.cluster_index
+    queries = log.queries[:n_bench]
+
+    def loop():
+        return [cidx.query(int(t), int(u))[0] for t, u in queries]
+
+    loop_docs, t_loop = timed(loop, repeats=1)
+    (ptr, docs, _work), t_host = timed(batched_query, cidx, queries, repeats=3)
+    (counts, info), t_dev = timed(batched_counts, cidx, queries, repeats=3)
+    # The engine's exactness guarantee, checked on every benchmark run.
+    assert np.array_equal(np.diff(ptr), counts)
+    assert np.array_equal(docs, np.concatenate(loop_docs + [np.empty(0, np.int32)]))
+    return row(
+        f"speedups/{corpus_name}/batched_engine/n{len(queries)}",
+        t_host,
+        f"loop_s={t_loop:.4f};host_s={t_host:.4f};device_s={t_dev:.4f};"
+        f"host_speedup={t_loop / max(t_host, 1e-9):.1f}x;"
+        f"pad_overhead={info['padding_overhead']:.2f}",
+    )
 
 
 def run(quick: bool = True, corpus_name: str = "forum"):
     n_docs = 12000 if quick else 48000
     ks = (16, 64, 256) if quick else (16, 64, 256, 1024)
     n_eval = 300 if quick else 1000
+    n_bench = 1000 if quick else 2000  # batched-engine wall-clock queries
     corpus, log = corpus_and_log(corpus_name, n_docs)
     pipe = SecludPipeline(tc=3000 if quick else 10000, doc_grained_below=512)
     rows = []
+    last_td = None
     for algo in ("topdown", "flat"):
         for k in ks:
             if algo == "flat" and k > 256:
@@ -19,7 +50,9 @@ def run(quick: bool = True, corpus_name: str = "forum"):
             res, t_fit = timed(
                 pipe.fit, corpus, k, algo=algo, log=log, repeats=1
             )
-            ev = pipe.evaluate(corpus, res, log, max_queries=n_eval)
+            if algo == "topdown":
+                last_td = res
+            ev = pipe.evaluate(corpus, res, log, max_queries=n_eval, batched=True)
             rows.append(
                 row(
                     f"speedups/{corpus_name}/{algo}/k{k}",
@@ -28,4 +61,5 @@ def run(quick: bool = True, corpus_name: str = "forum"):
                     f"S_R={ev['S_R']:.2f};k_actual={res.k}",
                 )
             )
+    rows.append(_batched_engine_row(corpus_name, last_td, log, n_bench))
     return rows

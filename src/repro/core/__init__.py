@@ -10,6 +10,9 @@ conjunctive posting-list intersections get cheaper, losslessly.
 * ``multilevel``    — ε-sampling multilevel initialization
 * ``topdown``       — hierarchical TopDown splitting (χ splitting factor)
 * ``cluster_index`` — two-level cluster index (query speedup S_C)
+* ``batched_query`` — batched two-level engine: vectorized planning +
+                      length-bucketed kernel execution for whole query
+                      batches (bit-exact vs the per-query loop)
 * ``reorder``       — cluster-contiguous renumbering (query speedup S_R)
 * ``seclud``        — SecludPipeline: fit + query + speedup report
 * ``jax_ops``       — jit'd device versions of the hot ops (tables,
@@ -29,6 +32,13 @@ from repro.core.objective import (
 from repro.core.kmeans import kmeans, KMeansResult
 from repro.core.multilevel import multilevel_cluster
 from repro.core.topdown import topdown_cluster
+from repro.core.batched_query import (
+    SegmentPlan,
+    batched_counts,
+    batched_lookup,
+    batched_query,
+    plan_segment_pairs,
+)
 from repro.core.cluster_index import ClusterIndex, build_cluster_index
 from repro.core.reorder import reorder_permutation
 from repro.core.seclud import SecludPipeline, SecludResult
@@ -48,6 +58,11 @@ __all__ = [
     "topdown_cluster",
     "ClusterIndex",
     "build_cluster_index",
+    "SegmentPlan",
+    "plan_segment_pairs",
+    "batched_query",
+    "batched_counts",
+    "batched_lookup",
     "reorder_permutation",
     "SecludPipeline",
     "SecludResult",

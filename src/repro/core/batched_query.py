@@ -1,0 +1,407 @@
+"""Batched two-level query engine — the per-query Python loops, vectorized.
+
+The paper's speedups were measured by looping queries one at a time in
+interpreted numpy (``SecludPipeline.evaluate``, ``ClusterIndex.query``,
+``SearchService.serve_counts``).  This module executes a whole
+``(n_queries, 2)`` array at once, in three layers:
+
+* ``_lookup_many`` — one vectorized pass that replicates
+  ``lookup_intersect(short, bucketize(long, universe, B))`` *bit-exactly*
+  (results, ``probes`` and ``scanned``) for many (short, long) pairs:
+  per-pair arrays are keyed as ``pair * BASE + value`` so a single global
+  ``searchsorted`` answers every per-pair directory probe at once.
+
+* planning — ``plan_segment_pairs`` intersects the cluster lists of both
+  query terms for the whole batch (CSR set-intersection, no Python
+  per-query loop), yielding every (query, common-cluster) posting-segment
+  pair plus the level-1 work accounting of ``ClusterIndex.query``.
+
+* execution — either the host path ``batched_query`` (exact doc ids +
+  the work dict of ``ClusterIndex.query``, summed), or the device path
+  ``batched_counts``: segment pairs are length-bucketed and padded like
+  ``repro.index.batched``, every bin runs through the batched intersect
+  kernel (Pallas on TPU, jnp elsewhere), and a segment-sum maps per-pair
+  counts back to per-query counts.
+
+Exactness guarantee: ``batched_query`` returns, for every query, the
+identical (sorted) result array and the identical work totals as calling
+``ClusterIndex.query`` in a loop; ``batched_counts`` returns the identical
+per-query counts.  ``batched_lookup`` does the same for the single-index
+Lookup loop (the baseline / S_R paths of ``SecludPipeline.evaluate``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.index.batched import pow2_buckets
+from repro.kernels.intersect.ref import PAD
+
+__all__ = [
+    "SegmentPlan",
+    "plan_segment_pairs",
+    "batched_query",
+    "batched_counts",
+    "batched_lookup",
+    "gather_padded",
+    "pow2_buckets",
+]
+
+
+# ----------------------------------------------------------------------
+# Ragged helpers
+# ----------------------------------------------------------------------
+
+
+def _ragged_indices(lengths: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(row id, offset within row) of every cell of a ragged row layout."""
+    rows = np.repeat(np.arange(len(lengths)), lengths)
+    within = np.arange(int(lengths.sum())) - (np.cumsum(lengths) - lengths)[rows]
+    return rows, within
+
+
+def _ragged_gather(values: np.ndarray, starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Concatenate ``values[starts[i] : starts[i] + lengths[i]]`` for all i."""
+    if int(lengths.sum()) == 0:
+        return np.empty(0, values.dtype)
+    rows, within = _ragged_indices(lengths)
+    return values[starts[rows] + within]
+
+
+def gather_padded(
+    values: np.ndarray,
+    starts: np.ndarray,
+    lengths: np.ndarray,
+    width: int,
+    fill: np.int32 = PAD,
+) -> np.ndarray:
+    """Gather ragged slices into a PAD-padded ``(len(starts), width)`` int32
+    block without a per-row Python loop."""
+    out = np.full((len(starts), width), fill, np.int32)
+    if int(lengths.sum()):
+        rows, within = _ragged_indices(lengths)
+        out[rows, within] = values[starts[rows] + within]
+    return out
+
+
+# ----------------------------------------------------------------------
+# The vectorized Lookup primitive
+# ----------------------------------------------------------------------
+
+
+def _lookup_many(
+    short_vals: np.ndarray,
+    short_ptr: np.ndarray,
+    long_vals: np.ndarray,
+    long_ptr: np.ndarray,
+    universes: np.ndarray,
+    bucket_size: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized ``lookup_intersect(short_p, bucketize(long_p, U_p, B))``
+    over P pairs at once.
+
+    ``short_vals`` / ``long_vals`` are the per-pair sorted arrays
+    concatenated in pair order (values in ``[0, U_p)``); ``*_ptr`` are the
+    (P + 1,) CSR offsets.  Returns ``(hit, probes, scanned, pos)`` where
+    ``hit`` masks ``short_vals`` (matched elements), ``probes`` / ``scanned``
+    are per-pair int64 work counts bit-identical to looping
+    ``repro.index.lookup.lookup_intersect``, and ``pos`` is the global index
+    into ``long_vals`` of each short element's match candidate (valid where
+    ``hit``).
+    """
+    n_pairs = len(universes)
+    short_len = np.diff(short_ptr)
+    long_len = np.diff(long_ptr)
+    n_short = len(short_vals)
+    if n_pairs == 0 or n_short == 0:
+        return (
+            np.zeros(n_short, bool),
+            np.zeros(n_pairs, np.int64),
+            np.zeros(n_pairs, np.int64),
+            np.zeros(n_short, np.int64),
+        )
+    universes = universes.astype(np.int64)
+    # Per-pair bucket shift, exactly `_pick_shift` (only consumed when the
+    # long side is non-empty; empty pairs cost nothing below).
+    target = np.maximum(
+        1.0, universes * float(bucket_size) / np.maximum(long_len, 1)
+    )
+    shift = np.maximum(np.floor(np.log2(target)).astype(np.int64), 0)
+    n_buckets = np.maximum(
+        (universes + (np.int64(1) << shift) - 1) >> shift, 1
+    )
+    # Key space: pair * BASE + value.  BASE exceeds every in-pair key —
+    # values (< U) and bucket boundaries (<= n_buckets << shift) — so keyed
+    # arrays stay globally sorted and probes never cross pair boundaries.
+    base = int((n_buckets << shift).max()) + 1
+
+    pair_s = np.repeat(np.arange(n_pairs, dtype=np.int64), short_len)
+    keyed_long = (
+        np.repeat(np.arange(n_pairs, dtype=np.int64), long_len) * base
+        + long_vals.astype(np.int64)
+    )
+    x = short_vals.astype(np.int64)
+    sh = shift[pair_s]
+    b = np.clip(x >> sh, 0, n_buckets[pair_s] - 1)
+    key0 = pair_s * base
+    lo = np.searchsorted(keyed_long, key0 + (b << sh))
+    hi = np.searchsorted(keyed_long, key0 + ((b + 1) << sh))
+    pos = np.searchsorted(keyed_long, key0 + x)
+    stop = np.minimum(pos, hi)
+    # Resumable scan: within a run of probes sharing (pair, bucket) the
+    # pointer starts where the previous probe left it.
+    start = lo.copy()
+    if n_short > 1:
+        same = (b[1:] == b[:-1]) & (pair_s[1:] == pair_s[:-1])
+        start[1:] = np.where(same, np.maximum(stop[:-1], lo[1:]), lo[1:])
+    scanned_el = np.maximum(stop - start, 0)
+    if len(keyed_long):
+        hit = (pos < hi) & (
+            keyed_long[np.minimum(pos, len(keyed_long) - 1)] == key0 + x
+        )
+    else:
+        hit = np.zeros(n_short, bool)
+    # lookup_intersect charges zero work when either side is empty.
+    probes = np.where(long_len > 0, short_len, 0).astype(np.int64)
+    scanned = np.zeros(n_pairs, np.int64)
+    np.add.at(scanned, pair_s, scanned_el)
+    return hit, probes, scanned, pos
+
+
+# ----------------------------------------------------------------------
+# Planning: all (query, common-cluster) segment pairs in one shot
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SegmentPlan:
+    """Every (query, common-cluster) posting-segment pair of a batch,
+    ordered by (query, cluster) — the order ``ClusterIndex.query`` emits.
+
+    ``short_*`` / ``long_*`` are absolute slices into
+    ``cluster_index.index.post_docs`` with the shorter segment on the
+    short side (ties keep the first query term short, like ``query``).
+    """
+
+    pair_query: np.ndarray  # (P,) int64 — query id of each segment pair
+    cluster: np.ndarray  # (P,) int64 — common cluster id
+    short_start: np.ndarray  # (P,) int64
+    short_len: np.ndarray  # (P,) int64
+    long_start: np.ndarray  # (P,) int64
+    long_len: np.ndarray  # (P,) int64
+    base: np.ndarray  # (P,) int64 — ranges[cluster]
+    width: np.ndarray  # (P,) int64 — cluster width (level-2 universe)
+    cluster_work: np.ndarray  # (n_queries,) int64 — level-1 lookup work
+    n_queries: int
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pair_query)
+
+
+def plan_segment_pairs(cidx, queries: np.ndarray) -> SegmentPlan:
+    """Vectorized level 1 of the two-level query for a whole batch.
+
+    CSR set-intersection of the two terms' cluster lists via keyed
+    ``searchsorted`` — no Python per-query loop — with the same shorter-
+    side probing (and work accounting) as ``ClusterIndex.query``.
+    """
+    q = np.asarray(queries, np.int64).reshape(-1, 2)
+    n = len(q)
+    t, u = q[:, 0], q[:, 1]
+    len_t = cidx.cl_ptr[t + 1] - cidx.cl_ptr[t]
+    len_u = cidx.cl_ptr[u + 1] - cidx.cl_ptr[u]
+    t_short = len_t <= len_u
+    s_off = np.where(t_short, cidx.cl_ptr[t], cidx.cl_ptr[u])
+    s_len = np.where(t_short, len_t, len_u)
+    l_off = np.where(t_short, cidx.cl_ptr[u], cidx.cl_ptr[t])
+    l_len = np.where(t_short, len_u, len_t)
+    short_ptr = np.concatenate([[0], np.cumsum(s_len)])
+    long_ptr = np.concatenate([[0], np.cumsum(l_len)])
+    cl64 = cidx.cl_ids.astype(np.int64)
+    short_cl = _ragged_gather(cl64, s_off, s_len)
+    long_cl = _ragged_gather(cl64, l_off, l_len)
+    hit, probes, scanned, pos = _lookup_many(
+        short_cl,
+        short_ptr,
+        long_cl,
+        long_ptr,
+        np.full(n, cidx.k, np.int64),
+        cidx.bucket_size_clusters,
+    )
+    pair_s = np.repeat(np.arange(n, dtype=np.int64), s_len)
+    within = np.arange(len(short_cl)) - (np.cumsum(s_len) - s_len)[pair_s]
+    rows = pair_s[hit]
+    i_short = s_off[rows] + within[hit]  # CSR position on the short term
+    i_long = l_off[rows] + (pos[hit] - long_ptr[rows])
+    it = np.where(t_short[rows], i_short, i_long)
+    iu = np.where(t_short[rows], i_long, i_short)
+    cluster = cl64[it]
+    st, et = cidx.seg_start[it], cidx.seg_end[it]
+    su, eu = cidx.seg_start[iu], cidx.seg_end[iu]
+    lt2, lu2 = et - st, eu - su
+    t_short2 = lt2 <= lu2  # query keeps seg_t short on ties
+    return SegmentPlan(
+        pair_query=rows,
+        cluster=cluster,
+        short_start=np.where(t_short2, st, su),
+        short_len=np.where(t_short2, lt2, lu2),
+        long_start=np.where(t_short2, su, st),
+        long_len=np.where(t_short2, lu2, lt2),
+        base=cidx.ranges[cluster],
+        width=cidx.ranges[cluster + 1] - cidx.ranges[cluster],
+        cluster_work=probes + scanned,
+        n_queries=n,
+    )
+
+
+# ----------------------------------------------------------------------
+# Host execution: exact doc ids + exact work accounting
+# ----------------------------------------------------------------------
+
+
+def batched_query(
+    cidx, queries: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
+    """The whole two-level query batch on the host, exactly.
+
+    Returns ``(ptr, docs, work)``: ``docs[ptr[i] : ptr[i + 1]]`` is
+    bit-identical to ``cidx.query(*queries[i])[0]`` and ``work`` holds the
+    summed per-query work dict of the loop.
+    """
+    plan = plan_segment_pairs(cidx, queries)
+    docs_arr = cidx.index.post_docs.astype(np.int64)
+    pair_s = np.repeat(np.arange(plan.n_pairs, dtype=np.int64), plan.short_len)
+    rel_short = _ragged_gather(docs_arr, plan.short_start, plan.short_len) - plan.base[pair_s]
+    rel_long = (
+        _ragged_gather(docs_arr, plan.long_start, plan.long_len)
+        - plan.base[np.repeat(np.arange(plan.n_pairs, dtype=np.int64), plan.long_len)]
+    )
+    hit, probes, scanned, _ = _lookup_many(
+        rel_short,
+        np.concatenate([[0], np.cumsum(plan.short_len)]),
+        rel_long,
+        np.concatenate([[0], np.cumsum(plan.long_len)]),
+        np.maximum(plan.width, 1),
+        cidx.bucket_size_postings,
+    )
+    docs = (rel_short[hit] + plan.base[pair_s[hit]]).astype(np.int32)
+    counts = np.bincount(
+        plan.pair_query[pair_s[hit]], minlength=plan.n_queries
+    )
+    ptr = np.zeros(plan.n_queries + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    cluster_level = int(plan.cluster_work.sum())
+    p_tot, s_tot = int(probes.sum()), int(scanned.sum())
+    work = {
+        "cluster_level": float(cluster_level),
+        "probes": float(p_tot),
+        "scanned": float(s_tot),
+        "total": float(cluster_level + p_tot + s_tot),
+    }
+    return ptr, docs, work
+
+
+def batched_lookup(
+    index, queries: np.ndarray, bucket_size: int = 16
+) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
+    """The single-index Lookup loop, vectorized and exact.
+
+    For each (t, u) row: the shorter posting list probes the bucketized
+    longer one — bit-identical results and work to the per-query
+    ``lookup_intersect(a, bucketize(b, n_docs, bucket_size))`` loop of
+    ``SecludPipeline.evaluate``.  Returns ``(ptr, docs, work)`` CSR.
+    """
+    q = np.asarray(queries, np.int64).reshape(-1, 2)
+    n = len(q)
+    lens = index.lengths()
+    t, u = q[:, 0], q[:, 1]
+    lt, lu = lens[t], lens[u]
+    t_short = lt <= lu
+    s_term = np.where(t_short, t, u)
+    l_term = np.where(t_short, u, t)
+    s_len, l_len = lens[s_term], lens[l_term]
+    short_vals = _ragged_gather(index.post_docs, index.post_ptr[s_term], s_len)
+    long_vals = _ragged_gather(index.post_docs, index.post_ptr[l_term], l_len)
+    hit, probes, scanned, _ = _lookup_many(
+        short_vals.astype(np.int64),
+        np.concatenate([[0], np.cumsum(s_len)]),
+        long_vals.astype(np.int64),
+        np.concatenate([[0], np.cumsum(l_len)]),
+        np.full(n, index.n_docs, np.int64),
+        bucket_size,
+    )
+    pair_s = np.repeat(np.arange(n, dtype=np.int64), s_len)
+    docs = short_vals[hit].astype(np.int32)
+    counts = np.bincount(pair_s[hit], minlength=n)
+    ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    p_tot, s_tot = int(probes.sum()), int(scanned.sum())
+    work = {
+        "probes": float(p_tot),
+        "scanned": float(s_tot),
+        "total": float(p_tot + s_tot),
+    }
+    return ptr, docs, work
+
+
+# ----------------------------------------------------------------------
+# Device execution: length-bucketed bins through the intersect kernels
+# ----------------------------------------------------------------------
+
+
+def batched_counts(
+    cidx,
+    queries: np.ndarray,
+    plan: SegmentPlan | None = None,
+) -> Tuple[np.ndarray, Dict[str, float]]:
+    """Per-query result counts through the batched intersect kernel.
+
+    Segment pairs from the planner are binned by pow2-rounded (short, long)
+    lengths (the ``repro.index.batched`` layout), each bin is PAD-padded
+    and intersected on device (``intersect_count`` dispatches: Pallas
+    kernel on TPU, jnp reference elsewhere), and a segment-sum maps
+    per-pair counts back to per-query counts.  Counts are identical to
+    ``ClusterIndex.query``.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.intersect.ops import intersect_count
+
+    if plan is None:
+        plan = plan_segment_pairs(cidx, queries)
+    docs_arr = cidx.index.post_docs
+    pair_counts = np.zeros(plan.n_pairs, np.int64)
+    true_cells = padded_cells = 0
+    if plan.n_pairs:
+        bs = pow2_buckets(plan.short_len)
+        bl = pow2_buckets(plan.long_len)
+        key = bs * (int(bl.max()) + 1) + bl
+        order = np.argsort(key, kind="stable")
+        bounds = np.flatnonzero(
+            np.concatenate([[True], key[order][1:] != key[order][:-1]])
+        )
+        for lo, hi in zip(bounds, np.append(bounds[1:], plan.n_pairs)):
+            idxs = order[lo:hi]
+            short = gather_padded(
+                docs_arr, plan.short_start[idxs], plan.short_len[idxs], int(bs[idxs[0]])
+            )
+            long = gather_padded(
+                docs_arr, plan.long_start[idxs], plan.long_len[idxs], int(bl[idxs[0]])
+            )
+            pair_counts[idxs] = np.asarray(
+                intersect_count(jnp.asarray(short), jnp.asarray(long))
+            )
+            true_cells += int(plan.short_len[idxs].sum() + plan.long_len[idxs].sum())
+            padded_cells += short.size + long.size
+    counts = np.bincount(
+        plan.pair_query, weights=pair_counts, minlength=plan.n_queries
+    ).astype(np.int64)
+    info = {
+        "n_pairs": float(plan.n_pairs),
+        "padding_overhead": float(padded_cells / max(true_cells, 1)),
+    }
+    return counts, info

@@ -103,9 +103,12 @@ class ClusterIndex:
         return out, work
 
     def query_all_clusters(self, t: int, u: int) -> Tuple[np.ndarray, Dict[str, float]]:
-        """Per-cluster query WITHOUT the cluster index (visits every cluster
-        containing both? no — visits all segment pairs by merging the two
-        cluster lists). The 'most direct way' of §3.3 for small k."""
+        """Two-level query WITHOUT the level-1 Lookup: the two cluster
+        lists are merge-joined directly (work = |C_t| + |C_u|) and the
+        posting intersection runs inside every common cluster.  This is
+        the 'most direct way' of §3.3 — competitive when k is small, and
+        the oracle the bucketed level-1 Lookup of :meth:`query` must
+        match exactly."""
         ct, st, et = self.term_segments(t)
         cu, su, eu = self.term_segments(u)
         # Merge-join the two sorted cluster-id lists.
@@ -140,6 +143,20 @@ class ClusterIndex:
             "total": merge_work + probes + scanned,
         }
         return out, work
+
+    def query_batch(
+        self, queries: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
+        """Vectorized :meth:`query` over an ``(n_queries, 2)`` term array.
+
+        Returns CSR ``(ptr, docs, work)``: ``docs[ptr[i] : ptr[i + 1]]``
+        is bit-identical to ``self.query(*queries[i])[0]`` and ``work``
+        sums the per-query work dicts — no Python per-query loop (see
+        ``repro.core.batched_query``).
+        """
+        from repro.core.batched_query import batched_query
+
+        return batched_query(self, queries)
 
 
 def build_cluster_index(

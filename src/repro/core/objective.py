@@ -226,7 +226,11 @@ def query_set_cost(
 
     terms = np.unique(queries)
     tmap = {int(t): i for i, t in enumerate(terms)}
-    rows = np.array([tmap[int(t)] for t in queries.ravel()]).reshape(-1, 2)
+    # dtype must be explicit: an empty query set would otherwise build a
+    # float64 array that fails as an index below.
+    rows = np.array(
+        [tmap[int(t)] for t in np.asarray(queries).ravel()], dtype=np.int64
+    ).reshape(-1, 2)
 
     if assign is None:
         assign = np.zeros(corpus.n_docs, dtype=np.int64)

@@ -18,14 +18,16 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.index.build import InvertedIndex
+from repro.kernels.intersect.ref import PAD as _PAD, intersect_count_ref
 
-__all__ = ["BatchedQueries", "batch_queries", "count_intersections_jnp"]
+__all__ = ["BatchedQueries", "batch_queries", "count_intersections_jnp", "pow2_buckets"]
 
-_PAD = np.int32(2**31 - 1)  # sorts after every real doc id
+# The intersect oracle lives in ONE place — repro.kernels.intersect.ref —
+# so the kernel contract (PAD value, sortedness, int32 counts) can't
+# drift between the production jnp path and the Pallas kernel's oracle.
+count_intersections_jnp = intersect_count_ref
 
 
 @dataclasses.dataclass
@@ -53,8 +55,17 @@ class BatchedQueries:
         return padded / max(true, 1)
 
 
-def _pow2_bucket(n: int) -> int:
-    return 1 << max(int(n - 1).bit_length(), 2) if n > 0 else 4
+def pow2_buckets(n: np.ndarray, min_exp: int = 2) -> np.ndarray:
+    """Pow2-rounded length buckets ``1 << max(bit_length(n - 1), min_exp)``
+    (0 -> ``1 << min_exp``), vectorized.  The single definition of the
+    length-bucket contract — ``repro.core.batched_query`` bins with it too."""
+    n = np.asarray(n, np.int64)
+    m = np.maximum(n - 1, 0)
+    e = np.zeros(len(n), np.int64)
+    while (m > 0).any():
+        e += m > 0
+        m >>= 1
+    return (np.int64(1) << np.maximum(e, min_exp)).astype(np.int64)
 
 
 def batch_queries(
@@ -78,7 +89,7 @@ def batch_queries(
         ls = np.minimum(ls, max_list_len)
         ll = np.minimum(ll, max_list_len)
 
-    keys = [(_pow2_bucket(int(a)), _pow2_bucket(int(b))) for a, b in zip(ls, ll)]
+    keys = list(zip(pow2_buckets(ls).tolist(), pow2_buckets(ll).tolist()))
     groups: Dict[Tuple[int, int], List[int]] = {}
     for i, k in enumerate(keys):
         groups.setdefault(k, []).append(i)
@@ -104,14 +115,3 @@ def batch_queries(
             )
         )
     return BatchedQueries(bins=bins, n_queries=len(queries))
-
-
-@jax.jit
-def count_intersections_jnp(short: jnp.ndarray, long: jnp.ndarray) -> jnp.ndarray:
-    """|a ∩ b| per row for PAD-padded sorted rows. Pure-jnp production path
-    (vectorized binary search of each short element into the long row);
-    the Pallas kernel mirrors this contract."""
-    pos = jax.vmap(jnp.searchsorted)(long, short)
-    pos = jnp.minimum(pos, long.shape[1] - 1)
-    hit = (jnp.take_along_axis(long, pos, axis=1) == short) & (short != _PAD)
-    return hit.sum(axis=1).astype(jnp.int32)

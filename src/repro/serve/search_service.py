@@ -10,9 +10,11 @@ The paper's two-level query algorithm as a serving system:
   * a query batch is broadcast, every shard intersects the posting
     segments of its local clusters, counts are combined with one psum.
 
-Two execution paths with the same contract:
-  * ``serve_counts``       — host path (numpy Lookup, exact work metric);
-  * ``make_sharded_step``  — device path: fixed-shape padded segment
+Two execution paths with the same contract, both on the batched
+two-level planner (``repro.core.batched_query`` — no per-query loop):
+  * ``serve_counts``       — host path (vectorized numpy Lookup, exact
+    work metric, bit-identical to looping ``ClusterIndex.query``);
+  * ``pack`` + ``device_counts`` — device path: fixed-shape padded segment
     batches + ``shard_map`` over cluster shards, Pallas/jnp intersection
     kernels. Used by the serving dry-run and the wall-clock benchmark.
 """
@@ -27,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.batched_query import batched_query, gather_padded, plan_segment_pairs
 from repro.core.seclud import SecludResult
 from repro.dist import sharding as sh
 from repro.kernels.intersect.ref import PAD
@@ -52,49 +55,35 @@ class SearchService:
     # -- host path -------------------------------------------------------
 
     def serve_counts(self, queries: np.ndarray) -> Tuple[np.ndarray, dict]:
-        """Exact per-query result counts via the two-level cluster index."""
-        counts = np.zeros(len(queries), dtype=np.int64)
-        total_work = 0.0
-        for qi, (t, u) in enumerate(queries):
-            docs, work = self.res.cluster_index.query(int(t), int(u))
-            counts[qi] = len(docs)
-            total_work += work["total"]
-        return counts, {"work": total_work}
+        """Exact per-query result counts via the two-level cluster index.
+
+        One vectorized engine pass (``repro.core.batched_query``) — counts
+        and total work are bit-identical to looping ``cluster_index.query``.
+        """
+        ptr, _docs, work = batched_query(self.res.cluster_index, np.asarray(queries))
+        return np.diff(ptr).astype(np.int64), {"work": work["total"]}
 
     # -- device path ------------------------------------------------------
 
     def pack(self, queries: np.ndarray, pad_to: int = 128) -> PackedClusters:
-        """Build the fixed-shape per-(query, cluster) segment batch."""
+        """Build the fixed-shape per-(query, cluster) segment batch.
+
+        Rows come from the batched planner (one CSR set-intersection for
+        the whole batch, no per-query loop).  An empty plan yields an
+        honestly-empty ``(0, pad_to)`` pack — never a fabricated PAD row
+        attributed to query 0.
+        """
         cidx = self.res.cluster_index
+        plan = plan_segment_pairs(cidx, np.asarray(queries))
         docs = cidx.index.post_docs
-        rows_s, rows_l, row_q = [], [], []
-        max_s = max_l = pad_to
-        for qi, (t, u) in enumerate(queries):
-            ct, st, et = cidx.term_segments(int(t))
-            cu, su, eu = cidx.term_segments(int(u))
-            common, it, iu = np.intersect1d(ct, cu, return_indices=True)
-            for c, a, b in zip(common, it, iu):
-                seg_t = docs[st[a] : et[a]]
-                seg_u = docs[su[b] : eu[b]]
-                if len(seg_t) > len(seg_u):
-                    seg_t, seg_u = seg_u, seg_t
-                rows_s.append(seg_t)
-                rows_l.append(seg_u)
-                row_q.append(qi)
-                max_s = max(max_s, len(seg_t))
-                max_l = max(max_l, len(seg_u))
-        r = len(rows_s)
+        max_s = max(int(plan.short_len.max()) if plan.n_pairs else 0, pad_to)
+        max_l = max(int(plan.long_len.max()) if plan.n_pairs else 0, pad_to)
         max_s = -(-max_s // pad_to) * pad_to
         max_l = -(-max_l // pad_to) * pad_to
-        short = np.full((max(r, 1), max_s), PAD, np.int32)
-        long = np.full((max(r, 1), max_l), PAD, np.int32)
-        for i, (s, l) in enumerate(zip(rows_s, rows_l)):
-            short[i, : len(s)] = s
-            long[i, : len(l)] = l
         return PackedClusters(
-            short=short,
-            long=long,
-            row_query=np.asarray(row_q, np.int32) if row_q else np.zeros(1, np.int32),
+            short=gather_padded(docs, plan.short_start, plan.short_len, max_s),
+            long=gather_padded(docs, plan.long_start, plan.long_len, max_l),
+            row_query=plan.pair_query.astype(np.int32),
             n_queries=len(queries),
         )
 
@@ -105,10 +94,12 @@ class SearchService:
         combined with one psum_scatter-equivalent reduction."""
         from repro.kernels.intersect.ops import intersect_count
 
+        nq = packed.n_queries
+        if packed.short.shape[0] == 0:
+            return jnp.zeros(nq, jnp.int32)
         short = jnp.asarray(packed.short)
         long = jnp.asarray(packed.long)
         rq = jnp.asarray(packed.row_query)
-        nq = packed.n_queries
 
         def local(short, long, rq):
             c = intersect_count(short, long)
@@ -125,7 +116,9 @@ class SearchService:
         if pad:
             short = jnp.pad(short, ((0, pad), (0, 0)), constant_values=PAD)
             long = jnp.pad(long, ((0, pad), (0, 0)), constant_values=PAD)
-            rq = jnp.pad(rq, (0, pad))
+            # Padding rows carry query id nq (out of range): segment_sum
+            # drops them by construction instead of crediting query 0.
+            rq = jnp.pad(rq, (0, pad), constant_values=nq)
         from jax.experimental.shard_map import shard_map
 
         fn = shard_map(

@@ -1,0 +1,193 @@
+"""Batched two-level engine: equivalence, work accounting, edge cases.
+
+The contract under test: on any corpus, for any (n, 2) query batch,
+
+    ClusterIndex.query  ≡  query_all_clusters  ≡  brute np.intersect1d
+                        ≡  batched_query (docs + work)  ≡  batched_counts
+
+including empty posting lists, k = 1 (single cluster), and terms absent
+from the cluster index.
+"""
+
+import numpy as np
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
+
+from repro.core.batched_query import (
+    batched_counts,
+    batched_lookup,
+    batched_query,
+    gather_padded,
+    plan_segment_pairs,
+    pow2_buckets,
+)
+from repro.core.cluster_index import build_cluster_index
+from repro.core.reorder import cluster_ranges, reorder_permutation
+from repro.data.corpus import Corpus
+from repro.index.build import build_index, permute_docs
+from repro.index.lookup import bucketize, lookup_intersect
+
+
+def _random_setup(rng, n_docs, n_terms, k, mean_len=12):
+    """A random CSR corpus (possibly with empty posting lists) and its
+    reordered cluster index under a random assignment."""
+    doc_lens = rng.integers(1, 2 * mean_len, n_docs)
+    rows = []
+    ptr = [0]
+    for d in range(n_docs):
+        r = np.unique(rng.integers(0, n_terms, doc_lens[d]))
+        rows.append(r)
+        ptr.append(ptr[-1] + len(r))
+    corpus = Corpus(
+        doc_ptr=np.asarray(ptr, np.int64),
+        doc_terms=np.concatenate(rows).astype(np.int32),
+        n_terms=n_terms,
+    )
+    assign = rng.integers(0, k, n_docs)
+    assign[rng.integers(0, n_docs)] = k - 1  # keep cluster k-1 non-empty
+    perm = reorder_permutation(assign, k)
+    ranges = cluster_ranges(assign, k)
+    index = build_index(corpus)
+    reordered = permute_docs(index, perm)
+    cidx = build_cluster_index(reordered, ranges)
+    return index, reordered, cidx, perm
+
+
+def _assert_engine_matches_loop(index, cidx, perm, queries):
+    """The full equivalence chain for one query batch."""
+    inv = np.empty(len(perm), np.int64)
+    inv[perm] = np.arange(len(perm))
+    ptr, docs, work = batched_query(cidx, queries)
+    counts, _ = batched_counts(cidx, queries)
+    assert np.array_equal(counts, np.diff(ptr))
+    cl = pr = sc = 0.0
+    for i, (t, u) in enumerate(queries):
+        want = np.intersect1d(index.postings(int(t)), index.postings(int(u)))
+        r1, w1 = cidx.query(int(t), int(u))
+        r2, w2 = cidx.query_all_clusters(int(t), int(u))
+        got = docs[ptr[i] : ptr[i + 1]]
+        assert np.array_equal(got, r1)  # bit-identical to the loop
+        assert np.array_equal(np.sort(inv[r1]), want)
+        assert np.array_equal(np.sort(inv[r2]), want)
+        cl += w1["cluster_level"]
+        pr += w1["probes"]
+        sc += w1["scanned"]
+    assert work["cluster_level"] == cl
+    assert work["probes"] == pr and work["scanned"] == sc
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_engine_equivalence_random_corpora(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    n_docs = data.draw(st.integers(50, 400))
+    n_terms = data.draw(st.integers(20, 300))
+    k = data.draw(st.integers(1, 16))
+    index, reordered, cidx, perm = _random_setup(rng, n_docs, n_terms, k)
+    n_q = data.draw(st.integers(1, 40))
+    queries = rng.integers(0, n_terms, (n_q, 2))
+    _assert_engine_matches_loop(index, cidx, perm, queries)
+
+
+def test_engine_single_cluster_k1(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 200, 80, k=1)
+    queries = rng.integers(0, 80, (30, 2))
+    assert cidx.k == 1
+    _assert_engine_matches_loop(index, cidx, perm, queries)
+
+
+def test_engine_terms_absent_from_cluster_index(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 150, 500, k=8)
+    df = np.diff(index.post_ptr)
+    empty = np.flatnonzero(df == 0)
+    assert len(empty) >= 2, "want terms with no postings in this setup"
+    alive = np.flatnonzero(df > 0)
+    queries = np.array(
+        [
+            [empty[0], empty[1]],  # both absent
+            [empty[0], alive[0]],  # one absent
+            [alive[0], empty[1]],
+            [alive[0], alive[1]],
+        ]
+    )
+    ptr, docs, work = batched_query(cidx, queries)
+    assert ptr[3] == 0  # absent terms produce empty results
+    _assert_engine_matches_loop(index, cidx, perm, queries)
+
+
+def test_engine_empty_query_batch(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 100, 50, k=4)
+    ptr, docs, work = batched_query(cidx, np.empty((0, 2), np.int64))
+    assert ptr.tolist() == [0] and len(docs) == 0 and work["total"] == 0
+    counts, _ = batched_counts(cidx, np.empty((0, 2), np.int64))
+    assert len(counts) == 0
+
+
+def test_batched_lookup_matches_loop(small_corpus, small_log):
+    index = build_index(small_corpus)
+    queries = small_log.queries[:120]
+    ptr, docs, work = batched_lookup(index, queries, bucket_size=16)
+    probes = scanned = 0
+    for i, (t, u) in enumerate(queries):
+        a, b = index.postings(int(t)), index.postings(int(u))
+        if len(a) > len(b):
+            a, b = b, a
+        r, w = lookup_intersect(a, bucketize(b, index.n_docs, 16))
+        assert np.array_equal(docs[ptr[i] : ptr[i + 1]], r)
+        probes += w["probes"]
+        scanned += w["scanned"]
+    assert work["probes"] == probes and work["scanned"] == scanned
+
+
+def test_plan_matches_query_level1(small_corpus, small_log):
+    """Planner pairs ≡ intersect1d of the two cluster lists, per query."""
+    rng = np.random.default_rng(5)
+    k = 12
+    index = build_index(small_corpus)
+    assign = rng.integers(0, k, small_corpus.n_docs)
+    perm = reorder_permutation(assign, k)
+    reordered = permute_docs(index, perm)
+    cidx = build_cluster_index(reordered, cluster_ranges(assign, k))
+    queries = small_log.queries[:60]
+    plan = plan_segment_pairs(cidx, queries)
+    for i, (t, u) in enumerate(queries):
+        want = np.intersect1d(cidx.term_clusters(int(t)), cidx.term_clusters(int(u)))
+        got = plan.cluster[plan.pair_query == i]
+        assert np.array_equal(got, want)
+        # Segment pairs really are the shorter/longer posting segments.
+    assert np.all(plan.short_len <= plan.long_len)
+    assert np.all(plan.width >= 1)
+
+
+def test_gather_padded_and_pow2_buckets():
+    vals = np.arange(100, dtype=np.int32)
+    out = gather_padded(vals, np.array([0, 10]), np.array([3, 0]), 4)
+    assert out.shape == (2, 4)
+    assert out[0, :3].tolist() == [0, 1, 2]
+    from repro.kernels.intersect.ref import PAD
+
+    assert (out[0, 3:] == PAD).all() and (out[1] == PAD).all()
+    got = pow2_buckets(np.array([0, 1, 3, 4, 5, 16, 17, 1000]))
+    assert got.tolist() == [4, 4, 4, 4, 8, 16, 32, 1024]
+
+
+def test_query_batch_method(small_corpus, small_log):
+    rng = np.random.default_rng(9)
+    k = 6
+    index = build_index(small_corpus)
+    assign = rng.integers(0, k, small_corpus.n_docs)
+    perm = reorder_permutation(assign, k)
+    reordered = permute_docs(index, perm)
+    cidx = build_cluster_index(reordered, cluster_ranges(assign, k))
+    queries = small_log.queries[:40]
+    ptr, docs, work = cidx.query_batch(queries)
+    for i, (t, u) in enumerate(queries):
+        assert np.array_equal(docs[ptr[i] : ptr[i + 1]], cidx.query(int(t), int(u))[0])
+
+
+def test_count_intersections_jnp_is_the_kernel_oracle():
+    """Satellite: the intersect oracle is defined in exactly one place."""
+    from repro.index.batched import _PAD, count_intersections_jnp
+    from repro.kernels.intersect.ref import PAD, intersect_count_ref
+
+    assert count_intersections_jnp is intersect_count_ref
+    assert _PAD == PAD

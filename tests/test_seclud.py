@@ -29,6 +29,32 @@ def test_evaluate_lossless_and_speedups(fitted, small_corpus, small_log):
     assert ev["S_C"] > 0 and ev["S_R"] > 0
 
 
+def test_evaluate_batched_matches_loop(fitted, small_corpus, small_log):
+    """The batched fast path is bit-identical on every shared work metric
+    and adds wall-clock timings."""
+    pipe, res = fitted
+    ev_loop = pipe.evaluate(small_corpus, res, small_log, max_queries=120)
+    ev_fast = pipe.evaluate(
+        small_corpus, res, small_log, max_queries=120, batched=True
+    )
+    for key in ev_loop:
+        assert ev_fast[key] == ev_loop[key], key
+    for key in ("t_baseline_s", "t_cluster_index_s", "t_reordered_s"):
+        assert ev_fast[key] >= 0.0
+
+
+def test_evaluate_max_queries_zero(fitted, small_corpus, small_log):
+    """Regression (satellite 1): max_queries=0 means zero queries, not the
+    whole log falling through an `if max_queries` truthiness check."""
+    pipe, res = fitted
+    for batched in (False, True):
+        ev = pipe.evaluate(
+            small_corpus, res, small_log, max_queries=0, batched=batched
+        )
+        assert ev["n_queries"] == 0
+        assert ev["work_baseline"] == 0
+
+
 def test_flat_algo_also_works(small_corpus, small_log):
     pipe = SecludPipeline(tc=400, doc_grained_below=256, seed=0)
     res = pipe.fit(small_corpus, k=4, algo="flat", log=small_log)
