@@ -1,0 +1,157 @@
+"""CI perf-regression gate: diff a fresh BENCH_smoke.json against the
+committed BENCH_baseline.json.
+
+Every CI run produces a smoke artifact (``benchmarks.run --smoke``); until
+now nothing ever read it, so a PR could silently destroy the batched
+engine's 22x win.  This gate fails the benchmark job when
+
+  * a ``batched_engine*`` row's ``host_speedup`` drops more than
+    ``--max-regression`` (default 25%) below the baseline — speedups are
+    loop-vs-engine ratios measured on the same machine, so they transfer
+    across runner generations;
+  * the smoke suite's total wall-clock grows more than
+    ``--max-wallclock-regression`` (defaults to ``--max-regression``;
+    catches "everything got slower" regressions the ratio hides).
+    Absolute seconds do NOT transfer across machine classes — when the
+    baseline was recorded on different hardware than the judge, pass a
+    loose wall-clock tolerance (CI does) or re-baseline with ``--update``
+    on the judging runner class;
+  * a row present in the baseline disappeared (a benchmark silently
+    dropped is a hole in the trajectory, not a pass);
+  * the fresh run recorded suite errors.
+
+Usage:
+    python -m benchmarks.run --smoke --out BENCH_smoke.json
+    python -m benchmarks.compare BENCH_smoke.json            # gate
+    python -m benchmarks.compare BENCH_smoke.json --update   # re-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_baseline.json"
+_SPEEDUP_RE = re.compile(r"host_speedup=([0-9.]+)x")
+
+
+def load(path: str | Path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def engine_speedups(doc: dict) -> Dict[str, float]:
+    """``batched_engine*`` row name -> host_speedup (loop / engine)."""
+    out: Dict[str, float] = {}
+    for r in doc.get("rows", []):
+        name = r.get("name", "")
+        if "/batched_engine" not in name:
+            continue
+        m = _SPEEDUP_RE.search(r.get("derived", ""))
+        if m:
+            out[name] = float(m.group(1))
+    return out
+
+
+def compare(
+    baseline: dict,
+    fresh: dict,
+    max_regression: float = 0.25,
+    max_wallclock_regression: float | None = None,
+) -> List[str]:
+    """Failure messages (empty = gate passes)."""
+    if max_wallclock_regression is None:
+        max_wallclock_regression = max_regression
+    fails: List[str] = []
+    base_sp = engine_speedups(baseline)
+    fresh_sp = engine_speedups(fresh)
+    if not base_sp:
+        fails.append("baseline has no batched_engine rows — regenerate it")
+    for name, b in sorted(base_sp.items()):
+        f = fresh_sp.get(name)
+        if f is None:
+            fails.append(f"{name}: row disappeared from the fresh run")
+        elif f < b * (1.0 - max_regression):
+            fails.append(
+                f"{name}: host_speedup regressed {b:.1f}x -> {f:.1f}x "
+                f"(> {max_regression:.0%} drop)"
+            )
+    bt = float(baseline.get("total_seconds", 0.0))
+    ft = float(fresh.get("total_seconds", 0.0))
+    if bt > 0 and ft > bt * (1.0 + max_wallclock_regression):
+        fails.append(
+            f"smoke wall-clock regressed {bt:.1f}s -> {ft:.1f}s "
+            f"(> {max_wallclock_regression:.0%} growth)"
+        )
+    errs = fresh.get("errors") or []
+    for e in errs:
+        fails.append(f"suite {e.get('suite')}: {e.get('error')}")
+    return fails
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="fresh BENCH_smoke.json to judge")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.25,
+        help="allowed fractional drop in a batched_engine host_speedup",
+    )
+    ap.add_argument(
+        "--max-wallclock-regression",
+        type=float,
+        default=None,
+        help="allowed fractional growth in smoke wall-clock (default: "
+        "--max-regression; set loose when baseline hardware differs "
+        "from the judging runner)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy the fresh run over the baseline instead of gating "
+        "(run on the CI runner class the gate will judge on)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+    fails = compare(
+        baseline, fresh, args.max_regression, args.max_wallclock_regression
+    )
+    base_sp = engine_speedups(baseline)
+    fresh_sp = engine_speedups(fresh)
+    for name in sorted(set(base_sp) | set(fresh_sp)):
+        b = base_sp.get(name)
+        f = fresh_sp.get(name)
+        print(
+            f"{name}: baseline "
+            f"{'-' if b is None else f'{b:.1f}x'} -> fresh "
+            f"{'-' if f is None else f'{f:.1f}x'}"
+        )
+    print(
+        f"wall-clock: baseline {baseline.get('total_seconds', 0)}s -> "
+        f"fresh {fresh.get('total_seconds', 0)}s"
+    )
+    if fails:
+        print("\nPERF GATE FAILED:", file=sys.stderr)
+        for m in fails:
+            print(f"  - {m}", file=sys.stderr)
+        return 1
+    print("perf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,10 @@ conjunctive posting-list intersections get cheaper, losslessly.
                       document-grained update modes
 * ``multilevel``    — ε-sampling multilevel initialization
 * ``topdown``       — hierarchical TopDown splitting (χ splitting factor)
-* ``cluster_index`` — two-level cluster index (query speedup S_C)
+* ``queries``       — arbitrary-arity conjunctive query batches (ragged
+                      CSR + padded forms)
+* ``cluster_index`` — two-level cluster index (query speedup S_C),
+                      cost-ordered plans for k >= 1 terms
 * ``batched_query`` — batched two-level engine: vectorized planning +
                       length-bucketed kernel execution for whole query
                       batches (bit-exact vs the per-query loop)
@@ -39,7 +42,8 @@ from repro.core.batched_query import (
     batched_query,
     plan_segment_pairs,
 )
-from repro.core.cluster_index import ClusterIndex, build_cluster_index
+from repro.core.cluster_index import ClusterIndex, build_cluster_index, cost_order
+from repro.core.queries import QUERY_PAD, ConjunctiveQueries, as_queries
 from repro.core.reorder import reorder_permutation
 from repro.core.seclud import SecludPipeline, SecludResult
 
@@ -58,6 +62,10 @@ __all__ = [
     "topdown_cluster",
     "ClusterIndex",
     "build_cluster_index",
+    "cost_order",
+    "QUERY_PAD",
+    "ConjunctiveQueries",
+    "as_queries",
     "SegmentPlan",
     "plan_segment_pairs",
     "batched_query",

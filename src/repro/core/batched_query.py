@@ -1,33 +1,43 @@
-"""Batched two-level query engine — the per-query Python loops, vectorized.
+"""Batched conjunctive-query engine — the per-query Python loops, vectorized.
 
 The paper's speedups were measured by looping queries one at a time in
 interpreted numpy (``SecludPipeline.evaluate``, ``ClusterIndex.query``,
-``SearchService.serve_counts``).  This module executes a whole
-``(n_queries, 2)`` array at once, in three layers:
+``SearchService.serve_counts``).  This module executes a whole batch of
+arbitrary-arity conjunctive queries (``repro.core.queries``) at once, in
+three layers:
 
 * ``_lookup_many`` — one vectorized pass that replicates
   ``lookup_intersect(short, bucketize(long, universe, B))`` *bit-exactly*
   (results, ``probes`` and ``scanned``) for many (short, long) pairs:
   per-pair arrays are keyed as ``pair * BASE + value`` so a single global
   ``searchsorted`` answers every per-pair directory probe at once.
+  ``_chain_stage`` applies it to one stage of a cost-ordered intersection
+  chain (the running intersection of every active item probes its next
+  list) — the batched mirror of ``ClusterIndex.query``'s smallest-first
+  plan.
 
-* planning — ``plan_segment_pairs`` intersects the cluster lists of both
-  query terms for the whole batch (CSR set-intersection, no Python
-  per-query loop), yielding every (query, common-cluster) posting-segment
-  pair plus the level-1 work accounting of ``ClusterIndex.query``.
+* planning — ``plan_segment_pairs`` chains the cluster lists of all query
+  terms for the whole batch (CSR set-intersection, no Python per-query
+  loop), yielding every (query, common-cluster) *segment group* — the
+  k posting segments of that cluster, cost-ordered — plus the level-1
+  work accounting of ``ClusterIndex.query``.
 
 * execution — either the host path ``batched_query`` (exact doc ids +
   the work dict of ``ClusterIndex.query``, summed), or the device path
-  ``batched_counts``: segment pairs are length-bucketed and padded like
-  ``repro.index.batched``, every bin runs through the batched intersect
-  kernel (Pallas on TPU, jnp elsewhere), and a segment-sum maps per-pair
-  counts back to per-query counts.
+  ``batched_counts``: segment groups are folded pairwise, stage by stage;
+  each stage is length-bucketed and padded like ``repro.index.batched``,
+  intermediate stages run a vectorized membership select
+  (``intersect_members_ref``) and the final pairwise reduction of each
+  group runs through the batched intersect kernel (Pallas on TPU, jnp
+  elsewhere); a segment-sum maps per-group counts back to per-query
+  counts.
 
 Exactness guarantee: ``batched_query`` returns, for every query, the
 identical (sorted) result array and the identical work totals as calling
 ``ClusterIndex.query`` in a loop; ``batched_counts`` returns the identical
 per-query counts.  ``batched_lookup`` does the same for the single-index
-Lookup loop (the baseline / S_R paths of ``SecludPipeline.evaluate``).
+Lookup chain (the baseline / S_R paths of ``SecludPipeline.evaluate``).
+2-term queries are the degenerate case: one chain stage, one reduction.
 """
 
 from __future__ import annotations
@@ -37,6 +47,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro.core.queries import ConjunctiveQueries, as_queries
 from repro.index.batched import pow2_buckets
 from repro.kernels.intersect.ref import PAD
 
@@ -69,6 +80,12 @@ def _ragged_gather(values: np.ndarray, starts: np.ndarray, lengths: np.ndarray) 
         return np.empty(0, values.dtype)
     rows, within = _ragged_indices(lengths)
     return values[starts[rows] + within]
+
+
+def _csr_starts(lengths: np.ndarray) -> np.ndarray:
+    out = np.zeros(len(lengths) + 1, dtype=np.int64)
+    np.cumsum(lengths, out=out[1:])
+    return out
 
 
 def gather_padded(
@@ -171,90 +188,204 @@ def _lookup_many(
     return hit, probes, scanned, pos
 
 
+def _chain_stage(
+    cur_vals: np.ndarray,
+    cur_lens: np.ndarray,
+    act_idx: np.ndarray,
+    long_vals: np.ndarray,
+    long_lens: np.ndarray,
+    universes: np.ndarray,
+    bucket_size: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """One stage of a batched cost-ordered intersection chain.
+
+    ``(cur_vals, cur_lens)`` is the running intersection of every item as
+    a CSR; items listed in ``act_idx`` probe their next list
+    (``long_vals``/``long_lens``, CSR over the active items in order) via
+    ``_lookup_many`` and are filtered in place; the rest pass through.
+    Returns ``(new_vals, new_lens, probes, scanned)`` with per-active-item
+    work arrays bit-identical to looping ``lookup_intersect``.
+    """
+    cur_starts = _csr_starts(cur_lens)[:-1]
+    sub_lens = cur_lens[act_idx]
+    sub_vals = _ragged_gather(cur_vals, cur_starts[act_idx], sub_lens)
+    hit, probes, scanned, _ = _lookup_many(
+        sub_vals,
+        _csr_starts(sub_lens),
+        long_vals,
+        _csr_starts(long_lens),
+        universes,
+        bucket_size,
+    )
+    rows, within = _ragged_indices(sub_lens)
+    keep = np.ones(len(cur_vals), bool)
+    keep[cur_starts[act_idx][rows] + within] = hit
+    new_vals = cur_vals[keep]
+    new_lens = cur_lens.copy()
+    new_lens[act_idx] = np.bincount(rows[hit], minlength=len(act_idx)).astype(np.int64)
+    return new_vals, new_lens, probes, scanned
+
+
+def _cost_ordered_terms(cq: ConjunctiveQueries, slot_lens: np.ndarray) -> np.ndarray:
+    """Each query's terms reordered by list length ascending (stable), the
+    batched mirror of ``repro.core.cluster_index.cost_order``.  Returns a
+    flat array aligned with ``cq.q_ptr``: position ``q_ptr[i] + r`` holds
+    query i's rank-r (r-th cheapest) term."""
+    slot_q = np.repeat(np.arange(cq.n_queries, dtype=np.int64), cq.arities)
+    slot_pos = np.arange(len(cq.q_terms), dtype=np.int64) - cq.q_ptr[:-1][slot_q]
+    order = np.lexsort((slot_pos, slot_lens, slot_q))
+    return cq.q_terms[order]
+
+
 # ----------------------------------------------------------------------
-# Planning: all (query, common-cluster) segment pairs in one shot
+# Planning: all (query, common-cluster) segment groups in one shot
 # ----------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class SegmentPlan:
-    """Every (query, common-cluster) posting-segment pair of a batch,
-    ordered by (query, cluster) — the order ``ClusterIndex.query`` emits.
+    """Every (query, common-cluster) segment group of a batch, ordered by
+    (query, cluster) — the order ``ClusterIndex.query`` emits.
 
-    ``short_*`` / ``long_*`` are absolute slices into
-    ``cluster_index.index.post_docs`` with the shorter segment on the
-    short side (ties keep the first query term short, like ``query``).
+    A group holds one posting segment per query term (``arity`` of them),
+    stored flat in ``seg_start``/``seg_len`` (absolute slices into
+    ``cluster_index.index.post_docs``), *cost-ordered*: within a group,
+    ``seg_ptr[g] + r`` is the r-th shortest segment (ties keep original
+    term order) — the chain order of the per-cluster intersection.
     """
 
-    pair_query: np.ndarray  # (P,) int64 — query id of each segment pair
-    cluster: np.ndarray  # (P,) int64 — common cluster id
-    short_start: np.ndarray  # (P,) int64
-    short_len: np.ndarray  # (P,) int64
-    long_start: np.ndarray  # (P,) int64
-    long_len: np.ndarray  # (P,) int64
-    base: np.ndarray  # (P,) int64 — ranges[cluster]
-    width: np.ndarray  # (P,) int64 — cluster width (level-2 universe)
+    pair_query: np.ndarray  # (G,) int64 — query id of each segment group
+    cluster: np.ndarray  # (G,) int64 — common cluster id
+    base: np.ndarray  # (G,) int64 — ranges[cluster]
+    width: np.ndarray  # (G,) int64 — cluster width (level-2 universe)
+    arity: np.ndarray  # (G,) int64 — segments per group (= query arity)
+    seg_ptr: np.ndarray  # (G + 1,) int64 — group offsets into seg_*
+    seg_start: np.ndarray  # (S,) int64 — rank-ordered within each group
+    seg_len: np.ndarray  # (S,) int64
     cluster_work: np.ndarray  # (n_queries,) int64 — level-1 lookup work
     n_queries: int
+    max_arity: int
 
     @property
     def n_pairs(self) -> int:
         return len(self.pair_query)
 
+    # Rank-0 / rank-1 views — the historical (short, long) segment pair of
+    # a 2-term batch; ``long_len`` is 0 for single-term groups.
 
-def plan_segment_pairs(cidx, queries: np.ndarray) -> SegmentPlan:
+    @property
+    def short_start(self) -> np.ndarray:
+        return self.seg_start[self.seg_ptr[:-1]]
+
+    @property
+    def short_len(self) -> np.ndarray:
+        return self.seg_len[self.seg_ptr[:-1]]
+
+    @property
+    def long_start(self) -> np.ndarray:
+        return self.seg_start[self.seg_ptr[:-1] + np.minimum(self.arity - 1, 1)]
+
+    @property
+    def long_len(self) -> np.ndarray:
+        i = self.seg_ptr[:-1] + np.minimum(self.arity - 1, 1)
+        return np.where(self.arity >= 2, self.seg_len[i], 0)
+
+
+def plan_segment_pairs(cidx, queries) -> SegmentPlan:
     """Vectorized level 1 of the two-level query for a whole batch.
 
-    CSR set-intersection of the two terms' cluster lists via keyed
-    ``searchsorted`` — no Python per-query loop — with the same shorter-
-    side probing (and work accounting) as ``ClusterIndex.query``.
+    Chains each query's cluster lists smallest-first via keyed
+    ``searchsorted`` — no Python per-query loop — with the same
+    running-intersection probing (and work accounting) as
+    ``ClusterIndex.query``, then resolves every common cluster to one
+    posting segment per term, cost-ordered for the level-2 chain.
     """
-    q = np.asarray(queries, np.int64).reshape(-1, 2)
-    n = len(q)
-    t, u = q[:, 0], q[:, 1]
-    len_t = cidx.cl_ptr[t + 1] - cidx.cl_ptr[t]
-    len_u = cidx.cl_ptr[u + 1] - cidx.cl_ptr[u]
-    t_short = len_t <= len_u
-    s_off = np.where(t_short, cidx.cl_ptr[t], cidx.cl_ptr[u])
-    s_len = np.where(t_short, len_t, len_u)
-    l_off = np.where(t_short, cidx.cl_ptr[u], cidx.cl_ptr[t])
-    l_len = np.where(t_short, len_u, len_t)
-    short_ptr = np.concatenate([[0], np.cumsum(s_len)])
-    long_ptr = np.concatenate([[0], np.cumsum(l_len)])
+    cq = as_queries(queries)
+    n = cq.n_queries
+    ar = cq.arities
+    max_a = cq.max_arity
     cl64 = cidx.cl_ids.astype(np.int64)
-    short_cl = _ragged_gather(cl64, s_off, s_len)
-    long_cl = _ragged_gather(cl64, l_off, l_len)
-    hit, probes, scanned, pos = _lookup_many(
-        short_cl,
-        short_ptr,
-        long_cl,
-        long_ptr,
-        np.full(n, cidx.k, np.int64),
-        cidx.bucket_size_clusters,
-    )
-    pair_s = np.repeat(np.arange(n, dtype=np.int64), s_len)
-    within = np.arange(len(short_cl)) - (np.cumsum(s_len) - s_len)[pair_s]
-    rows = pair_s[hit]
-    i_short = s_off[rows] + within[hit]  # CSR position on the short term
-    i_long = l_off[rows] + (pos[hit] - long_ptr[rows])
-    it = np.where(t_short[rows], i_short, i_long)
-    iu = np.where(t_short[rows], i_long, i_short)
-    cluster = cl64[it]
-    st, et = cidx.seg_start[it], cidx.seg_end[it]
-    su, eu = cidx.seg_start[iu], cidx.seg_end[iu]
-    lt2, lu2 = et - st, eu - su
-    t_short2 = lt2 <= lu2  # query keeps seg_t short on ties
+    t_flat = cq.q_terms
+    clen = (cidx.cl_ptr[t_flat + 1] - cidx.cl_ptr[t_flat]).astype(np.int64)
+    ord_terms = _cost_ordered_terms(cq, clen)
+
+    # Level 1: cost-ordered chain over the cluster lists (universe k).
+    t0 = ord_terms[cq.q_ptr[:-1]]
+    cur_lens = (cidx.cl_ptr[t0 + 1] - cidx.cl_ptr[t0]).astype(np.int64)
+    cur_vals = _ragged_gather(cl64, cidx.cl_ptr[t0], cur_lens)
+    cluster_work = np.zeros(n, np.int64)
+    for s in range(1, max_a):
+        act = np.flatnonzero(ar > s)
+        if len(act) == 0:
+            break
+        ts = ord_terms[cq.q_ptr[:-1][act] + s]
+        l_lens = (cidx.cl_ptr[ts + 1] - cidx.cl_ptr[ts]).astype(np.int64)
+        l_vals = _ragged_gather(cl64, cidx.cl_ptr[ts], l_lens)
+        cur_vals, cur_lens, probes, scanned = _chain_stage(
+            cur_vals,
+            cur_lens,
+            act,
+            l_vals,
+            l_lens,
+            np.full(len(act), cidx.k, np.int64),
+            cidx.bucket_size_clusters,
+        )
+        cluster_work[act] += probes + scanned
+
+    # Groups: one per surviving (query, common cluster).
+    group_query = np.repeat(np.arange(n, dtype=np.int64), cur_lens)
+    cluster = cur_vals.astype(np.int64)
+    g_arity = ar[group_query] if len(group_query) else np.zeros(0, np.int64)
+
+    # Resolve each group to one posting segment per ORIGINAL term slot:
+    # the common cluster is present in every term's cluster list, so a
+    # keyed searchsorted per slot finds its CSR position exactly.
+    key_base = cidx.k + 1
+    parts_g, parts_pos, parts_st, parts_ln = [], [], [], []
+    for r in range(max_a):
+        qa = np.flatnonzero(ar > r)
+        if len(qa) == 0:
+            break
+        gm = np.flatnonzero(g_arity > r)
+        tr = t_flat[cq.q_ptr[:-1][qa] + r]
+        l_lens = (cidx.cl_ptr[tr + 1] - cidx.cl_ptr[tr]).astype(np.int64)
+        l_ptr = _csr_starts(l_lens)
+        keyed_long = (
+            np.repeat(np.arange(len(qa), dtype=np.int64), l_lens) * key_base
+            + _ragged_gather(cl64, cidx.cl_ptr[tr], l_lens)
+        )
+        qrank = np.full(n, -1, np.int64)
+        qrank[qa] = np.arange(len(qa))
+        gq = qrank[group_query[gm]]
+        pos = np.searchsorted(keyed_long, gq * key_base + cluster[gm])
+        csr_i = cidx.cl_ptr[tr][gq] + (pos - l_ptr[gq])
+        parts_g.append(gm)
+        parts_pos.append(np.full(len(gm), r, np.int64))
+        parts_st.append(cidx.seg_start[csr_i])
+        parts_ln.append(cidx.seg_end[csr_i] - cidx.seg_start[csr_i])
+
+    if parts_g:
+        flat_g = np.concatenate(parts_g)
+        flat_pos = np.concatenate(parts_pos)
+        flat_st = np.concatenate(parts_st)
+        flat_ln = np.concatenate(parts_ln)
+    else:
+        flat_g = flat_pos = flat_st = flat_ln = np.zeros(0, np.int64)
+    # Cost order within each group: length ascending, ties by term order —
+    # exactly `cost_order` in the per-query loop.
+    order2 = np.lexsort((flat_pos, flat_ln, flat_g))
     return SegmentPlan(
-        pair_query=rows,
+        pair_query=group_query,
         cluster=cluster,
-        short_start=np.where(t_short2, st, su),
-        short_len=np.where(t_short2, lt2, lu2),
-        long_start=np.where(t_short2, su, st),
-        long_len=np.where(t_short2, lu2, lt2),
         base=cidx.ranges[cluster],
         width=cidx.ranges[cluster + 1] - cidx.ranges[cluster],
-        cluster_work=probes + scanned,
+        arity=g_arity,
+        seg_ptr=_csr_starts(g_arity),
+        seg_start=flat_st[order2],
+        seg_len=flat_ln[order2],
+        cluster_work=cluster_work,
         n_queries=n,
+        max_arity=max_a,
     )
 
 
@@ -264,86 +395,108 @@ def plan_segment_pairs(cidx, queries: np.ndarray) -> SegmentPlan:
 
 
 def batched_query(
-    cidx, queries: np.ndarray
+    cidx, queries
 ) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
-    """The whole two-level query batch on the host, exactly.
+    """The whole two-level conjunctive-query batch on the host, exactly.
 
     Returns ``(ptr, docs, work)``: ``docs[ptr[i] : ptr[i + 1]]`` is
-    bit-identical to ``cidx.query(*queries[i])[0]`` and ``work`` holds the
+    bit-identical to ``cidx.query(*terms_i)[0]`` and ``work`` holds the
     summed per-query work dict of the loop.
     """
-    plan = plan_segment_pairs(cidx, queries)
-    docs_arr = cidx.index.post_docs.astype(np.int64)
-    pair_s = np.repeat(np.arange(plan.n_pairs, dtype=np.int64), plan.short_len)
-    rel_short = _ragged_gather(docs_arr, plan.short_start, plan.short_len) - plan.base[pair_s]
-    rel_long = (
-        _ragged_gather(docs_arr, plan.long_start, plan.long_len)
-        - plan.base[np.repeat(np.arange(plan.n_pairs, dtype=np.int64), plan.long_len)]
+    cq = as_queries(queries)
+    plan = plan_segment_pairs(cidx, cq)
+    docs64 = cidx.index.post_docs.astype(np.int64)
+    n_g = plan.n_pairs
+    r0 = plan.seg_ptr[:-1]
+    cur_lens = plan.seg_len[r0].astype(np.int64)
+    cur_vals = (
+        _ragged_gather(docs64, plan.seg_start[r0], cur_lens)
+        - plan.base[np.repeat(np.arange(n_g), cur_lens)]
     )
-    hit, probes, scanned, _ = _lookup_many(
-        rel_short,
-        np.concatenate([[0], np.cumsum(plan.short_len)]),
-        rel_long,
-        np.concatenate([[0], np.cumsum(plan.long_len)]),
-        np.maximum(plan.width, 1),
-        cidx.bucket_size_postings,
+    probes_tot = scanned_tot = 0
+    for s in range(1, plan.max_arity):
+        act = np.flatnonzero(plan.arity > s)
+        if len(act) == 0:
+            break
+        si = r0[act] + s
+        l_lens = plan.seg_len[si].astype(np.int64)
+        l_vals = (
+            _ragged_gather(docs64, plan.seg_start[si], l_lens)
+            - plan.base[act][np.repeat(np.arange(len(act)), l_lens)]
+        )
+        cur_vals, cur_lens, probes, scanned = _chain_stage(
+            cur_vals,
+            cur_lens,
+            act,
+            l_vals,
+            l_lens,
+            np.maximum(plan.width[act], 1),
+            cidx.bucket_size_postings,
+        )
+        probes_tot += int(probes.sum())
+        scanned_tot += int(scanned.sum())
+    docs = (cur_vals + plan.base[np.repeat(np.arange(n_g), cur_lens)]).astype(
+        np.int32
     )
-    docs = (rel_short[hit] + plan.base[pair_s[hit]]).astype(np.int32)
-    counts = np.bincount(
-        plan.pair_query[pair_s[hit]], minlength=plan.n_queries
-    )
+    counts = np.zeros(plan.n_queries, np.int64)
+    np.add.at(counts, plan.pair_query, cur_lens)
     ptr = np.zeros(plan.n_queries + 1, np.int64)
     np.cumsum(counts, out=ptr[1:])
     cluster_level = int(plan.cluster_work.sum())
-    p_tot, s_tot = int(probes.sum()), int(scanned.sum())
     work = {
         "cluster_level": float(cluster_level),
-        "probes": float(p_tot),
-        "scanned": float(s_tot),
-        "total": float(cluster_level + p_tot + s_tot),
+        "probes": float(probes_tot),
+        "scanned": float(scanned_tot),
+        "total": float(cluster_level + probes_tot + scanned_tot),
     }
     return ptr, docs, work
 
 
 def batched_lookup(
-    index, queries: np.ndarray, bucket_size: int = 16
+    index, queries, bucket_size: int = 16
 ) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
-    """The single-index Lookup loop, vectorized and exact.
+    """The single-index Lookup chain, vectorized and exact.
 
-    For each (t, u) row: the shorter posting list probes the bucketized
-    longer one — bit-identical results and work to the per-query
-    ``lookup_intersect(a, bucketize(b, n_docs, bucket_size))`` loop of
-    ``SecludPipeline.evaluate``.  Returns ``(ptr, docs, work)`` CSR.
+    For each query: its posting lists, smallest-first, with the running
+    intersection probing the next bucketized list — bit-identical results
+    and work to the per-query ``lookup_intersect`` chain of
+    ``SecludPipeline.evaluate`` (for 2 terms: the shorter list probes the
+    longer, the historical loop).  Returns ``(ptr, docs, work)`` CSR.
     """
-    q = np.asarray(queries, np.int64).reshape(-1, 2)
-    n = len(q)
-    lens = index.lengths()
-    t, u = q[:, 0], q[:, 1]
-    lt, lu = lens[t], lens[u]
-    t_short = lt <= lu
-    s_term = np.where(t_short, t, u)
-    l_term = np.where(t_short, u, t)
-    s_len, l_len = lens[s_term], lens[l_term]
-    short_vals = _ragged_gather(index.post_docs, index.post_ptr[s_term], s_len)
-    long_vals = _ragged_gather(index.post_docs, index.post_ptr[l_term], l_len)
-    hit, probes, scanned, _ = _lookup_many(
-        short_vals.astype(np.int64),
-        np.concatenate([[0], np.cumsum(s_len)]),
-        long_vals.astype(np.int64),
-        np.concatenate([[0], np.cumsum(l_len)]),
-        np.full(n, index.n_docs, np.int64),
-        bucket_size,
-    )
-    pair_s = np.repeat(np.arange(n, dtype=np.int64), s_len)
-    docs = short_vals[hit].astype(np.int32)
-    counts = np.bincount(pair_s[hit], minlength=n)
+    cq = as_queries(queries)
+    n = cq.n_queries
+    docs64 = index.post_docs.astype(np.int64)
+    lens_all = index.lengths()
+    ord_terms = _cost_ordered_terms(cq, lens_all[cq.q_terms].astype(np.int64))
+    t0 = ord_terms[cq.q_ptr[:-1]]
+    cur_lens = lens_all[t0].astype(np.int64)
+    cur_vals = _ragged_gather(docs64, index.post_ptr[t0], cur_lens)
+    probes_tot = scanned_tot = 0
+    for s in range(1, cq.max_arity):
+        act = np.flatnonzero(cq.arities > s)
+        if len(act) == 0:
+            break
+        ts = ord_terms[cq.q_ptr[:-1][act] + s]
+        l_lens = lens_all[ts].astype(np.int64)
+        l_vals = _ragged_gather(docs64, index.post_ptr[ts], l_lens)
+        cur_vals, cur_lens, probes, scanned = _chain_stage(
+            cur_vals,
+            cur_lens,
+            act,
+            l_vals,
+            l_lens,
+            np.full(len(act), index.n_docs, np.int64),
+            bucket_size,
+        )
+        probes_tot += int(probes.sum())
+        scanned_tot += int(scanned.sum())
+    docs = cur_vals.astype(np.int32)
     ptr = np.zeros(n + 1, np.int64)
-    np.cumsum(counts, out=ptr[1:])
-    p_tot, s_tot = int(probes.sum()), int(scanned.sum())
+    np.cumsum(cur_lens, out=ptr[1:])
     work = {
-        "probes": float(p_tot),
-        "scanned": float(s_tot),
-        "total": float(p_tot + s_tot),
+        "probes": float(probes_tot),
+        "scanned": float(scanned_tot),
+        "total": float(probes_tot + scanned_tot),
     }
     return ptr, docs, work
 
@@ -353,50 +506,116 @@ def batched_lookup(
 # ----------------------------------------------------------------------
 
 
+def _csr_update(
+    vals: np.ndarray,
+    lens: np.ndarray,
+    rows: np.ndarray,
+    rows_vals: np.ndarray,
+    rows_lens: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Replace the CSR slices of ``rows`` (any order) with ``rows_vals``
+    (concatenated in ``rows`` order); every other slice passes through."""
+    new_lens = lens.copy()
+    new_lens[rows] = rows_lens
+    out = np.empty(int(new_lens.sum()), vals.dtype)
+    new_starts = _csr_starts(new_lens)[:-1]
+    old_starts = _csr_starts(lens)[:-1]
+    untouched = np.ones(len(lens), bool)
+    untouched[rows] = False
+    ui = np.flatnonzero(untouched)
+    r_u, w_u = _ragged_indices(lens[ui])
+    out[new_starts[ui][r_u] + w_u] = vals[old_starts[ui][r_u] + w_u]
+    r_r, w_r = _ragged_indices(rows_lens)
+    out[new_starts[rows][r_r] + w_r] = rows_vals
+    return out, new_lens
+
+
 def batched_counts(
     cidx,
-    queries: np.ndarray,
+    queries,
     plan: SegmentPlan | None = None,
 ) -> Tuple[np.ndarray, Dict[str, float]]:
     """Per-query result counts through the batched intersect kernel.
 
-    Segment pairs from the planner are binned by pow2-rounded (short, long)
-    lengths (the ``repro.index.batched`` layout), each bin is PAD-padded
-    and intersected on device (``intersect_count`` dispatches: Pallas
-    kernel on TPU, jnp reference elsewhere), and a segment-sum maps
-    per-pair counts back to per-query counts.  Counts are identical to
-    ``ClusterIndex.query``.
+    Segment groups from the planner fold pairwise in cost order: at each
+    chain stage the active groups are binned by pow2-rounded (current,
+    next-segment) lengths (the ``repro.index.batched`` layout) and
+    PAD-padded.  A group's *final* reduction runs through
+    ``intersect_count`` (Pallas kernel on TPU, jnp elsewhere);
+    intermediate stages run the vectorized membership select
+    ``intersect_members_ref`` and compact the survivors for the next
+    stage.  Counts are identical to ``ClusterIndex.query``.
     """
     import jax.numpy as jnp
 
     from repro.kernels.intersect.ops import intersect_count
+    from repro.kernels.intersect.ref import intersect_members_ref
 
+    cq = as_queries(queries)
     if plan is None:
-        plan = plan_segment_pairs(cidx, queries)
+        plan = plan_segment_pairs(cidx, cq)
     docs_arr = cidx.index.post_docs
-    pair_counts = np.zeros(plan.n_pairs, np.int64)
+    n_g = plan.n_pairs
+    pair_counts = np.zeros(n_g, np.int64)
     true_cells = padded_cells = 0
-    if plan.n_pairs:
-        bs = pow2_buckets(plan.short_len)
-        bl = pow2_buckets(plan.long_len)
-        key = bs * (int(bl.max()) + 1) + bl
-        order = np.argsort(key, kind="stable")
-        bounds = np.flatnonzero(
-            np.concatenate([[True], key[order][1:] != key[order][:-1]])
-        )
-        for lo, hi in zip(bounds, np.append(bounds[1:], plan.n_pairs)):
-            idxs = order[lo:hi]
-            short = gather_padded(
-                docs_arr, plan.short_start[idxs], plan.short_len[idxs], int(bs[idxs[0]])
+    if n_g:
+        r0 = plan.seg_ptr[:-1]
+        cur_lens = plan.seg_len[r0].astype(np.int64)
+        cur_vals = _ragged_gather(docs_arr, plan.seg_start[r0], cur_lens)
+        # Single-term groups need no reduction: the segment IS the result.
+        done = plan.arity == 1
+        pair_counts[done] = cur_lens[done]
+        for s in range(1, plan.max_arity):
+            act = np.flatnonzero(plan.arity > s)
+            if len(act) == 0:
+                break
+            cur_starts = _csr_starts(cur_lens)[:-1]
+            si = r0[act] + s
+            l_starts = plan.seg_start[si]
+            l_lens = plan.seg_len[si].astype(np.int64)
+            final = plan.arity[act] == s + 1
+            bs = pow2_buckets(cur_lens[act])
+            bl = pow2_buckets(l_lens)
+            key = bs * (int(bl.max()) + 1) + bl
+            order = np.argsort(key, kind="stable")
+            bounds = np.flatnonzero(
+                np.concatenate([[True], key[order][1:] != key[order][:-1]])
             )
-            long = gather_padded(
-                docs_arr, plan.long_start[idxs], plan.long_len[idxs], int(bl[idxs[0]])
-            )
-            pair_counts[idxs] = np.asarray(
-                intersect_count(jnp.asarray(short), jnp.asarray(long))
-            )
-            true_cells += int(plan.short_len[idxs].sum() + plan.long_len[idxs].sum())
-            padded_cells += short.size + long.size
+            nf_rows, nf_lens, nf_vals = [], [], []
+            for lo, hi in zip(bounds, np.append(bounds[1:], len(act))):
+                idxs = order[lo:hi]  # positions within the active set
+                g = act[idxs]
+                short = gather_padded(
+                    cur_vals, cur_starts[g], cur_lens[g], int(bs[idxs[0]])
+                )
+                long = gather_padded(
+                    docs_arr, l_starts[idxs], l_lens[idxs], int(bl[idxs[0]])
+                )
+                true_cells += int(cur_lens[g].sum() + l_lens[idxs].sum())
+                padded_cells += short.size + long.size
+                fmask = final[idxs]
+                if fmask.all():
+                    pair_counts[g] = np.asarray(
+                        intersect_count(jnp.asarray(short), jnp.asarray(long))
+                    )
+                    continue
+                hit = np.asarray(
+                    intersect_members_ref(jnp.asarray(short), jnp.asarray(long))
+                )
+                cnt = hit.sum(axis=1)
+                pair_counts[g[fmask]] = cnt[fmask]
+                nf = ~fmask
+                nf_rows.append(g[nf])
+                nf_lens.append(cnt[nf].astype(np.int64))
+                nf_vals.append(short[nf][hit[nf]])
+            if nf_rows:
+                cur_vals, cur_lens = _csr_update(
+                    cur_vals,
+                    cur_lens,
+                    np.concatenate(nf_rows),
+                    np.concatenate(nf_vals) if nf_vals else np.empty(0, np.int32),
+                    np.concatenate(nf_lens),
+                )
     counts = np.bincount(
         plan.pair_query, weights=pair_counts, minlength=plan.n_queries
     ).astype(np.int64)

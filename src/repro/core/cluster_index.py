@@ -1,11 +1,18 @@
-"""Two-level cluster index (paper §3.3).
+"""Two-level cluster index (paper §3.3), arbitrary-arity conjunctions.
 
 A *cluster index* is an inverted index over a corpus of k "documents",
 each the concatenation of one cluster: for every term it lists the
-clusters containing at least one document with that term.  A query (t, u)
-first intersects the two cluster lists (Lookup, bucket size 8 — paper §4),
-then runs the ordinary intersection only inside the common clusters
-(Lookup, bucket size 16).
+clusters containing at least one document with that term.  A conjunctive
+query (t_1, ..., t_a) first intersects the a cluster lists (Lookup,
+bucket size 8 — paper §4), then runs the ordinary intersection only
+inside the common clusters (Lookup, bucket size 16).
+
+Both levels use a *cost-ordered plan* under the paper's lookup cost
+model Φ(x, y) = min(x, y) (``repro.index.intersect.pair_cost``): lists
+are intersected smallest-first, so the probing side of every Lookup is
+the running intersection — never longer than any remaining list.  For
+two terms this degenerates to the classic "shorter list probes the
+longer" rule; ties keep the original term order (stable).
 
 We build it over the *reordered* index (cluster-contiguous ids), so each
 (term, cluster) posting segment is a contiguous slice — one ``searchsorted``
@@ -16,14 +23,24 @@ run-length encoding of the (term, cluster) pairs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
 from repro.index.build import InvertedIndex
-from repro.index.lookup import bucketize, lookup_intersect
+from repro.index.lookup import bucketize, cost_order, lookup_intersect
 
-__all__ = ["ClusterIndex", "build_cluster_index"]
+__all__ = ["ClusterIndex", "build_cluster_index", "cost_order"]
+
+
+def _flatten_terms(terms: Sequence) -> Tuple[int, ...]:
+    """query(t, u), query(t, u, v), query([t, u, v]) all mean the same."""
+    if len(terms) == 1 and not np.isscalar(terms[0]) and hasattr(terms[0], "__len__"):
+        terms = tuple(terms[0])
+    out = tuple(int(t) for t in terms)
+    if not out:
+        raise ValueError("a conjunctive query needs >= 1 term")
+    return out
 
 
 @dataclasses.dataclass
@@ -54,88 +71,86 @@ class ClusterIndex:
     # Query algorithms
     # ------------------------------------------------------------------
 
-    def query(self, t: int, u: int) -> Tuple[np.ndarray, Dict[str, float]]:
-        """Two-level query: cluster-list intersection, then per-cluster
-        posting intersection.  Returns (result doc ids, work dict)."""
-        ct, st, et = self.term_segments(t)
-        cu, su, eu = self.term_segments(u)
-        # Level 1: intersect cluster lists (bucket size 8, universe k).
-        if len(ct) <= len(cu):
-            short, long_ = ct, cu
-        else:
-            short, long_ = cu, ct
-        common, w1 = lookup_intersect(
-            short.astype(np.int32),
-            bucketize(long_.astype(np.int32), self.k, self.bucket_size_clusters),
-        )
-        # Positions of common clusters in each side's segment arrays.
-        it = np.searchsorted(ct, common)
-        iu = np.searchsorted(cu, common)
-
+    def _level2(
+        self,
+        terms: Tuple[int, ...],
+        segs: List[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+        common: np.ndarray,
+    ) -> Tuple[np.ndarray, int, int]:
+        """Per-cluster posting intersection, cost-ordered chain.  Shared
+        by :meth:`query` and :meth:`query_all_clusters` (they differ only
+        in how ``common`` was computed)."""
+        pos = [np.searchsorted(segs[i][0], common) for i in range(len(terms))]
         docs = self.index.post_docs
         results = []
         probes = scanned = 0
-        for ci, a, b in zip(common, it, iu):
-            seg_t = docs[st[a] : et[a]]
-            seg_u = docs[su[b] : eu[b]]
-            if len(seg_t) > len(seg_u):
-                seg_t, seg_u = seg_u, seg_t
-            width = int(self.ranges[ci + 1] - self.ranges[ci])
-            blong = bucketize(
-                seg_u - self.ranges[ci], max(width, 1), self.bucket_size_postings
-            )
-            res, w2 = lookup_intersect((seg_t - self.ranges[ci]).astype(np.int32), blong)
-            probes += w2["probes"]
-            scanned += w2["scanned"]
-            if len(res):
-                results.append(res + self.ranges[ci])
+        for j, ci in enumerate(common):
+            base = self.ranges[ci]
+            width = int(self.ranges[ci + 1] - base)
+            slices = [
+                docs[segs[i][1][pos[i][j]] : segs[i][2][pos[i][j]]]
+                for i in range(len(terms))
+            ]
+            order = cost_order([len(s) for s in slices])
+            cur = (slices[order[0]] - base).astype(np.int32)
+            for i in order[1:]:
+                blong = bucketize(
+                    slices[i] - base, max(width, 1), self.bucket_size_postings
+                )
+                cur, w2 = lookup_intersect(cur, blong)
+                probes += w2["probes"]
+                scanned += w2["scanned"]
+            if len(cur):
+                results.append(cur.astype(np.int64) + base)
         out = (
             np.concatenate(results).astype(np.int32)
             if results
             else np.empty(0, np.int32)
         )
+        return out, probes, scanned
+
+    def query(self, *terms) -> Tuple[np.ndarray, Dict[str, float]]:
+        """Two-level conjunctive query over k >= 1 terms: cost-ordered
+        cluster-list intersection, then a cost-ordered per-cluster posting
+        chain.  Returns (result doc ids, work dict)."""
+        terms = _flatten_terms(terms)
+        segs = [self.term_segments(t) for t in terms]
+        # Level 1: chain the cluster lists smallest-first (bucket size 8,
+        # universe k); the running intersection is always the probing side.
+        order = cost_order([len(s[0]) for s in segs])
+        common = segs[order[0]][0].astype(np.int32)
+        cluster_level = 0
+        for i in order[1:]:
+            common, w1 = lookup_intersect(
+                common,
+                bucketize(segs[i][0].astype(np.int32), self.k, self.bucket_size_clusters),
+            )
+            cluster_level += w1["total"]
+        out, probes, scanned = self._level2(terms, segs, common)
         work = {
-            "cluster_level": float(w1["total"]),
+            "cluster_level": float(cluster_level),
             "probes": float(probes),
             "scanned": float(scanned),
-            "total": float(w1["total"] + probes + scanned),
+            "total": float(cluster_level + probes + scanned),
         }
         return out, work
 
-    def query_all_clusters(self, t: int, u: int) -> Tuple[np.ndarray, Dict[str, float]]:
-        """Two-level query WITHOUT the level-1 Lookup: the two cluster
-        lists are merge-joined directly (work = |C_t| + |C_u|) and the
-        posting intersection runs inside every common cluster.  This is
-        the 'most direct way' of §3.3 — competitive when k is small, and
-        the oracle the bucketed level-1 Lookup of :meth:`query` must
+    def query_all_clusters(self, *terms) -> Tuple[np.ndarray, Dict[str, float]]:
+        """Two-level query WITHOUT the level-1 Lookup: the cluster lists
+        are merge-joined directly (work = Σ lengths per chain stage) and
+        the posting intersection runs inside every common cluster.  This
+        is the 'most direct way' of §3.3 — competitive when k is small,
+        and the oracle the bucketed level-1 Lookup of :meth:`query` must
         match exactly."""
-        ct, st, et = self.term_segments(t)
-        cu, su, eu = self.term_segments(u)
-        # Merge-join the two sorted cluster-id lists.
-        common, it, iu = np.intersect1d(ct, cu, return_indices=True)
-        docs = self.index.post_docs
-        results = []
-        probes = scanned = 0
-        for ci, a, b in zip(common, it, iu):
-            seg_t = docs[st[a] : et[a]]
-            seg_u = docs[su[b] : eu[b]]
-            if len(seg_t) > len(seg_u):
-                seg_t, seg_u = seg_u, seg_t
-            width = int(self.ranges[ci + 1] - self.ranges[ci])
-            blong = bucketize(
-                seg_u - self.ranges[ci], max(width, 1), self.bucket_size_postings
-            )
-            res, w2 = lookup_intersect((seg_t - self.ranges[ci]).astype(np.int32), blong)
-            probes += w2["probes"]
-            scanned += w2["scanned"]
-            if len(res):
-                results.append(res + self.ranges[ci])
-        out = (
-            np.concatenate(results).astype(np.int32)
-            if results
-            else np.empty(0, np.int32)
-        )
-        merge_work = float(len(ct) + len(cu))
+        terms = _flatten_terms(terms)
+        segs = [self.term_segments(t) for t in terms]
+        order = cost_order([len(s[0]) for s in segs])
+        common = segs[order[0]][0]
+        merge_work = 0.0
+        for i in order[1:]:
+            merge_work += float(len(common) + len(segs[i][0]))
+            common = np.intersect1d(common, segs[i][0])
+        out, probes, scanned = self._level2(terms, segs, common)
         work = {
             "cluster_level": merge_work,
             "probes": float(probes),
@@ -145,12 +160,14 @@ class ClusterIndex:
         return out, work
 
     def query_batch(
-        self, queries: np.ndarray
+        self, queries
     ) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
-        """Vectorized :meth:`query` over an ``(n_queries, 2)`` term array.
+        """Vectorized :meth:`query` over a query batch — an ``(n, k)``
+        term array (``QUERY_PAD`` entries for ragged rows) or a
+        :class:`repro.core.queries.ConjunctiveQueries`.
 
         Returns CSR ``(ptr, docs, work)``: ``docs[ptr[i] : ptr[i + 1]]``
-        is bit-identical to ``self.query(*queries[i])[0]`` and ``work``
+        is bit-identical to ``self.query(*terms_i)`` and ``work``
         sums the per-query work dicts — no Python per-query loop (see
         ``repro.core.batched_query``).
         """

@@ -213,24 +213,29 @@ def query_set_cost(
     corpus: Corpus,
     assign: Optional[np.ndarray],
     k: int,
-    queries: np.ndarray,
+    queries,
     model: str = "lookup",
 ) -> float:
-    """Σ_q Σ_i Φ(n_i(t_q), n_i(u_q)) over an explicit query set.
+    """Theoretical per-cluster cost of an explicit conjunctive query set.
+
+    For a query with per-cluster term counts (c_1, ..., c_a) the chain
+    cost in cluster i is modeled as Σ_{s ≠ argmin} Φ(min_j c_j, c_s): the
+    smallest list is the running probe side of the cost-ordered plan and
+    Φ prices each of the a−1 pairwise reductions.  For 2-term queries
+    this is exactly the paper's Σ_q Σ_i Φ(n_i(t_q), n_i(u_q)); single-term
+    queries cost 0 (no intersection happens).
 
     ``assign=None`` means the unclustered baseline (k = 1).  Used for the
     theoretical speedup S_T on held-out query logs — note this uses FULL
     term counts, not the TC-restricted view (queries hit rare terms too).
+    ``queries`` is any form ``repro.core.queries.as_queries`` accepts.
     """
+    from repro.core.queries import as_queries
     from repro.index.intersect import pair_cost
 
-    terms = np.unique(queries)
-    tmap = {int(t): i for i, t in enumerate(terms)}
-    # dtype must be explicit: an empty query set would otherwise build a
-    # float64 array that fails as an index below.
-    rows = np.array(
-        [tmap[int(t)] for t in np.asarray(queries).ravel()], dtype=np.int64
-    ).reshape(-1, 2)
+    cq = as_queries(queries)
+    terms = np.unique(cq.q_terms)
+    rows = np.searchsorted(terms, cq.q_terms)  # (nnz,) rank of each slot
 
     if assign is None:
         assign = np.zeros(corpus.n_docs, dtype=np.int64)
@@ -246,6 +251,12 @@ def query_set_cost(
         e_rank.astype(np.int64) * k + assign[e_doc], minlength=len(terms) * k
     ).reshape(len(terms), k)
 
-    x = cnt[rows[:, 0]]  # (nq, k)
-    y = cnt[rows[:, 1]]
-    return float(pair_cost(x, y, model).sum())
+    if cq.n_queries == 0:
+        return 0.0
+    c = cnt[rows]  # (nnz, k) per-slot per-cluster counts
+    # x: per-query per-cluster minimum — the probing side of the chain.
+    x = np.minimum.reduceat(c, cq.q_ptr[:-1], axis=0)  # (nq, k)
+    qid = np.repeat(np.arange(cq.n_queries), cq.arities)
+    # Σ_slots Φ(x, c_s) − Φ(x, x): the min slot contributes Φ(x, x) which
+    # cancels, leaving one Φ per actual chain stage.
+    return float(pair_cost(x[qid], c, model).sum() - pair_cost(x, x, model).sum())

@@ -15,8 +15,18 @@ __all__ = ["reorder_permutation", "cluster_ranges"]
 
 
 def reorder_permutation(assign: np.ndarray, k: int) -> np.ndarray:
-    """perm[old_id] = new_id; documents sorted by (cluster, old_id)."""
+    """perm[old_id] = new_id; documents sorted by (cluster, old_id).
+
+    ``assign`` must be a valid assignment into [0, k): a stale array from
+    an earlier clustering (or a wrong k) would otherwise be silently
+    renumbered into a permutation that disagrees with ``cluster_ranges``.
+    """
     assign = np.asarray(assign)
+    if assign.size and (assign.min() < 0 or assign.max() >= k):
+        raise ValueError(
+            f"assignment out of range: values span [{assign.min()}, "
+            f"{assign.max()}] but k = {k}"
+        )
     order = np.argsort(assign, kind="stable")  # old ids in new order
     perm = np.empty_like(order)
     perm[order] = np.arange(len(order))

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import TYPE_CHECKING, Dict, Optional
 
 import numpy as np
 
@@ -32,12 +32,15 @@ from repro.core.objective import (
     psi_from_counts,
     query_set_cost,
 )
+from repro.core.queries import as_queries
 from repro.core.reorder import cluster_ranges, reorder_permutation
 from repro.core.topdown import topdown_cluster
 from repro.data.corpus import Corpus
-from repro.data.query_log import QueryLog, term_probabilities
 from repro.index.build import InvertedIndex, build_index, permute_docs
-from repro.index.lookup import bucketize, lookup_intersect
+from repro.index.lookup import chain_lookup
+
+if TYPE_CHECKING:  # deferred: repro.data.query_log itself imports
+    from repro.data.query_log import QueryLog  # repro.core.queries
 
 __all__ = ["SecludPipeline", "SecludResult"]
 
@@ -95,6 +98,8 @@ class SecludPipeline:
         p: Optional[np.ndarray] = None,
     ) -> SecludResult:
         if p is None:
+            from repro.data.query_log import term_probabilities
+
             p = term_probabilities(corpus.n_terms, log=log, corpus=corpus)
         view = frequent_term_view(corpus, p, tc=self.tc)
 
@@ -173,7 +178,12 @@ class SecludPipeline:
     ) -> Dict[str, float]:
         """Work-metric speedups S_T / S_C / S_R over the query log.
 
-        ``batched=True`` runs the vectorized two-level engine
+        Queries may be any arity >= 1 (``log.queries`` is the padded
+        rectangular form; ragged rows carry ``QUERY_PAD``).  The baseline
+        and S_R paths chain the single-index Lookup smallest-list-first;
+        S_C runs the cost-ordered two-level query.
+
+        ``batched=True`` runs the vectorized engine
         (``repro.core.batched_query``) instead of the per-query Python
         loop: identical work dict (the engine is bit-exact), plus
         wall-clock timings ``t_baseline_s`` / ``t_cluster_index_s`` /
@@ -185,7 +195,14 @@ class SecludPipeline:
             return self._evaluate_batched(
                 corpus, result, queries, check_lossless, cost_model
             )
+        cq = as_queries(np.asarray(queries))
         n_docs = corpus.n_docs
+
+        def chain(index, terms):
+            """Cost-ordered single-index Lookup chain (k=2: the shorter
+            list probes the longer — the historical loop)."""
+            lists = [index.postings(int(t)) for t in terms]
+            return chain_lookup(lists, n_docs, self.bucket_size)
 
         base_total = 0.0
         sc_total = 0.0
@@ -195,35 +212,22 @@ class SecludPipeline:
         inv_perm = np.empty(n_docs, dtype=np.int64)
         inv_perm[result.perm] = np.arange(n_docs)
 
-        for t, u in queries:
-            t, u = int(t), int(u)
+        for terms in cq:
             # Baseline: Lookup on the randomized single index.
-            a = result.base_index.postings(t)
-            b = result.base_index.postings(u)
-            if len(a) > len(b):
-                a, b = b, a
-            r0, w0 = lookup_intersect(
-                a, bucketize(b, n_docs, self.bucket_size)
-            )
-            base_total += w0["total"]
+            r0, w0 = chain(result.base_index, terms)
+            base_total += w0
             # S_C: two-level cluster-index query.
-            r1, w1 = result.cluster_index.query(t, u)
+            r1, w1 = result.cluster_index.query(*terms)
             sc_total += w1["total"]
             # S_R: single-index Lookup on the reordered index.
-            a2 = result.reordered_index.postings(t)
-            b2 = result.reordered_index.postings(u)
-            if len(a2) > len(b2):
-                a2, b2 = b2, a2
-            r2, w2 = lookup_intersect(
-                a2, bucketize(b2, n_docs, self.bucket_size)
-            )
-            sr_total += w2["total"]
+            r2, w2 = chain(result.reordered_index, terms)
+            sr_total += w2
             if check_lossless:
                 s0 = np.sort(inv_base[r0])
                 s1 = np.sort(inv_perm[r1])
                 s2 = np.sort(inv_perm[r2])
                 assert np.array_equal(s0, s1) and np.array_equal(s0, s2), (
-                    f"lossless violation on query ({t},{u})"
+                    f"lossless violation on query {tuple(terms)}"
                 )
 
         return self._speedup_report(
@@ -277,20 +281,20 @@ class SecludPipeline:
         looped path (the engine replicates Lookup's accounting exactly)."""
         from repro.core.batched_query import batched_lookup, batched_query
 
-        qarr = np.asarray(queries, dtype=np.int64).reshape(-1, 2)
+        cq = as_queries(np.asarray(queries))
         n_docs = corpus.n_docs
 
         t0 = time.perf_counter()
         ptr0, docs0, w0 = batched_lookup(
-            result.base_index, qarr, bucket_size=self.bucket_size
+            result.base_index, cq, bucket_size=self.bucket_size
         )
         t_base = time.perf_counter() - t0
         t0 = time.perf_counter()
-        ptr1, docs1, w1 = batched_query(result.cluster_index, qarr)
+        ptr1, docs1, w1 = batched_query(result.cluster_index, cq)
         t_cluster = time.perf_counter() - t0
         t0 = time.perf_counter()
         ptr2, docs2, w2 = batched_lookup(
-            result.reordered_index, qarr, bucket_size=self.bucket_size
+            result.reordered_index, cq, bucket_size=self.bucket_size
         )
         t_reordered = time.perf_counter() - t0
 
@@ -303,7 +307,7 @@ class SecludPipeline:
                 "lossless violation: per-query result counts differ"
             )
             # Sort each per-query segment in original-id space and compare.
-            qid = np.repeat(np.arange(len(qarr)), np.diff(ptr0))
+            qid = np.repeat(np.arange(cq.n_queries), np.diff(ptr0))
 
             def canon(docs, inv):
                 mapped = inv[docs]
@@ -317,7 +321,7 @@ class SecludPipeline:
         return self._speedup_report(
             corpus,
             result,
-            qarr,
+            cq,
             cost_model,
             w0["total"],
             w1["total"],

@@ -2,24 +2,27 @@
 
 The paper (§3.1) needs only the *marginal* probability P[t] of each term
 appearing in a query; it estimates these either from a query log (AOL,
-pagenstecher) or from corpus term frequencies.  Queries themselves are
-2-term conjunctive queries (the paper's focus).
+pagenstecher) or from corpus term frequencies.  The paper's evaluation
+uses 2-term conjunctive queries; the engine (and this sampler) supports
+arbitrary arity — the SAP-HANA attribute-filter scenario the paper cites
+("in stock AND category=X AND brand=Y") is a 3-term conjunction.
 
 Synthetic logs here are sampled with Zipf rank-probabilities over terms
 (matching the paper's Figure 1) with a configurable topical co-occurrence
-bias: with probability ``co_topic`` the two query terms are drawn from the
-same topic block, which mirrors real logs where query terms are
-semantically related (and which makes the clustered speedup realistic
-rather than adversarial).
+bias: with probability ``co_topic`` a non-leading query term is drawn from
+the same topic block as the leading term, which mirrors real logs where
+query terms are semantically related (and which makes the clustered
+speedup realistic rather than adversarial).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.queries import QUERY_PAD, ConjunctiveQueries
 from repro.data.corpus import Corpus
 
 __all__ = ["QueryLog", "synth_query_log", "term_probabilities"]
@@ -27,9 +30,12 @@ __all__ = ["QueryLog", "synth_query_log", "term_probabilities"]
 
 @dataclasses.dataclass
 class QueryLog:
-    """A set of two-term conjunctive queries.
+    """A set of conjunctive queries in the padded rectangular form.
 
-    ``queries`` has shape (n_queries, 2), int32 term ids, t != u.
+    ``queries`` has shape (n_queries, max_arity), int32 term ids; rows
+    with fewer terms are filled with ``QUERY_PAD`` (-1).  Terms within a
+    query are distinct.  The historical 2-term log is the pad-free
+    ``max_arity == 2`` case.
     """
 
     queries: np.ndarray
@@ -38,14 +44,26 @@ class QueryLog:
     def n_queries(self) -> int:
         return len(self.queries)
 
+    @property
+    def max_arity(self) -> int:
+        return self.queries.shape[1] if self.queries.ndim == 2 else 0
+
+    def arities(self) -> np.ndarray:
+        return (self.queries != QUERY_PAD).sum(axis=1)
+
+    def as_conjunctive(self) -> ConjunctiveQueries:
+        return ConjunctiveQueries.from_padded(self.queries)
+
     def distinct_terms(self) -> np.ndarray:
-        return np.unique(self.queries)
+        t = np.unique(self.queries)
+        return t[t != QUERY_PAD]
 
     def stats(self) -> dict:
         """Table-2-style statistics."""
         return {
             "queries": self.n_queries,
             "distinct_terms": int(len(self.distinct_terms())),
+            "mean_arity": float(self.arities().mean()) if self.n_queries else 0.0,
         }
 
 
@@ -56,14 +74,22 @@ def synth_query_log(
     co_topic: float = 0.5,
     frequency_weight: float = 0.5,
     seed: int = 1,
+    arity: int | Sequence[int] = 2,
+    arity_weights: Optional[Sequence[float]] = None,
 ) -> QueryLog:
-    """Sample a Zipf-like two-term query log against ``corpus``.
+    """Sample a Zipf-like conjunctive query log against ``corpus``.
 
     Term query-propensity mixes corpus document frequency (people search
-    for terms that exist) with a Zipf-over-frequency-rank tilt, then pairs
-    are drawn either independently or within the same topical block.
-    Terms with zero document frequency are never sampled (queries with an
-    empty posting list cost nothing and the paper's logs are real text).
+    for terms that exist) with a Zipf-over-frequency-rank tilt, then the
+    non-leading terms are drawn either independently or within the same
+    topical block as the leading term.  Terms with zero document frequency
+    are never sampled (queries with an empty posting list cost nothing and
+    the paper's logs are real text).
+
+    ``arity`` is either a single arity for every query (default 2, the
+    paper's setting — identical samples to the historical 2-term-only
+    sampler) or a sequence of arities sampled per query with optional
+    ``arity_weights``; ragged rows are ``QUERY_PAD``-filled.
     """
     rng = np.random.default_rng(seed)
     df = corpus.term_doc_freq().astype(np.float64)
@@ -79,35 +105,66 @@ def synth_query_log(
     def draw(size: int) -> np.ndarray:
         return np.searchsorted(cdf, rng.random(size), side="right").astype(np.int64)
 
+    def topical(t: np.ndarray) -> np.ndarray:
+        """One companion term per entry of ``t``: with prob ``co_topic``
+        drawn near t's topic block, else an independent draw."""
+        n = len(t)
+        u = draw(n)
+        spec = corpus.spec
+        if spec is not None and co_topic > 0:
+            same = rng.random(n) < co_topic
+            hi = spec.topic_block_hi if spec.topic_block_hi is not None else corpus.n_terms // 2
+            lo = min(spec.topic_block_lo, hi - 1)
+            blockw = max(1, (hi - lo) // max(spec.n_topics, 1))
+            in_block = same & (t >= lo) & (t < lo + blockw * spec.n_topics)
+            if in_block.any():
+                z = (t[in_block] - lo) // blockw
+                off = rng.integers(0, blockw, size=int(in_block.sum()))
+                u2 = lo + z * blockw + off
+                u2 = np.minimum(u2, corpus.n_terms - 1)
+                ok = df[u2] > 0
+                u[np.flatnonzero(in_block)[ok]] = u2[ok]
+        return u
+
+    arities = np.atleast_1d(np.asarray(arity, dtype=np.int64))
+    if (arities < 1).any():
+        raise ValueError("query arity must be >= 1")
+    max_arity = int(arities.max())
+
     t = draw(n_queries)
 
-    # Second term: with prob co_topic, restricted near the first term's
-    # frequency-rank neighbourhood (a cheap, corpus-agnostic proxy for
-    # topical relatedness that creates correlated posting lists).
-    u = draw(n_queries)
-    spec = corpus.spec
-    if spec is not None and co_topic > 0:
-        same = rng.random(n_queries) < co_topic
-        hi = spec.topic_block_hi if spec.topic_block_hi is not None else corpus.n_terms // 2
-        lo = min(spec.topic_block_lo, hi - 1)
-        blockw = max(1, (hi - lo) // max(spec.n_topics, 1))
-        in_block = same & (t >= lo) & (t < lo + blockw * spec.n_topics)
-        if in_block.any():
-            z = (t[in_block] - lo) // blockw
-            off = rng.integers(0, blockw, size=int(in_block.sum()))
-            u2 = lo + z * blockw + off
-            u2 = np.minimum(u2, corpus.n_terms - 1)
-            ok = df[u2] > 0
-            u[np.flatnonzero(in_block)[ok]] = u2[ok]
-
-    # No degenerate t == u queries.
-    eq = t == u
-    while eq.any():
-        u[eq] = draw(int(eq.sum()))
+    if max_arity == 2 and len(arities) == 1:
+        # The historical 2-term sampler, bit-for-bit (same rng stream).
+        u = topical(t)
         eq = t == u
+        while eq.any():
+            u[eq] = draw(int(eq.sum()))
+            eq = t == u
+        q = np.stack([t, u], axis=1).astype(np.int32)
+        return QueryLog(queries=q)
 
-    q = np.stack([t, u], axis=1).astype(np.int32)
-    return QueryLog(queries=q)
+    if arity_weights is not None:
+        p = np.asarray(arity_weights, dtype=np.float64)
+        p = p / p.sum()
+    else:
+        p = None
+    per_query = rng.choice(arities, size=n_queries, p=p)
+
+    q = np.full((n_queries, max_arity), QUERY_PAD, dtype=np.int64)
+    q[:, 0] = t
+    for slot in range(1, max_arity):
+        need = per_query > slot  # rows still owed a term at this slot
+        if not need.any():
+            break
+        idx = np.flatnonzero(need)
+        u = topical(t[idx])
+        # Terms within a query must be distinct: resample collisions.
+        dup = (q[idx, :slot] == u[:, None]).any(axis=1)
+        while dup.any():
+            u[dup] = draw(int(dup.sum()))
+            dup = (q[idx, :slot] == u[:, None]).any(axis=1)
+        q[idx, slot] = u
+    return QueryLog(queries=q.astype(np.int32))
 
 
 def term_probabilities(
@@ -123,7 +180,9 @@ def term_probabilities(
     array of shape (n_terms,) summing to 1.
     """
     if log is not None:
-        counts = np.bincount(log.queries.ravel(), minlength=n_terms).astype(np.float64)
+        flat = log.queries.ravel()
+        flat = flat[flat != QUERY_PAD]  # ragged rows carry pad entries
+        counts = np.bincount(flat, minlength=n_terms).astype(np.float64)
     elif corpus is not None:
         counts = corpus.term_doc_freq().astype(np.float64)
     else:

@@ -32,7 +32,15 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["BucketedList", "bucketize", "lookup_intersect", "lookup_work", "adaptive_intersect"]
+__all__ = [
+    "BucketedList",
+    "bucketize",
+    "lookup_intersect",
+    "lookup_work",
+    "chain_lookup",
+    "cost_order",
+    "adaptive_intersect",
+]
 
 
 @dataclasses.dataclass
@@ -125,6 +133,39 @@ def lookup_work(
     if len(a) > len(b):
         a, b = b, a
     return lookup_intersect(a, bucketize(b, universe, bucket_size))
+
+
+def cost_order(lengths) -> list:
+    """Cost-ordered plan: indices sorted by list length ascending, stable.
+
+    Greedy-optimal under the paper's lookup model Φ(x, y) = min(x, y):
+    the running intersection (always the shortest operand) probes each
+    remaining list, cheapest first.  Ties keep the caller's order, so the
+    2-term plan equals the historical "first term probes when lengths
+    tie" behavior.
+    """
+    return sorted(range(len(lengths)), key=lambda i: lengths[i])
+
+
+def chain_lookup(
+    lists, universe: int, bucket_size: int = 16
+) -> Tuple[np.ndarray, float]:
+    """Cost-ordered Lookup chain over k >= 1 sorted lists.
+
+    THE single definition of the per-query conjunctive Lookup semantics:
+    the running intersection probes each remaining bucketized list,
+    smallest-first (k = 2: the shorter list probes the longer — the
+    historical loop).  Returns ``(result, total work)``; a single list
+    costs nothing (no intersection happens).  ``repro.core.batched_query.
+    batched_lookup`` is its vectorized bit-exact mirror.
+    """
+    order = cost_order([len(x) for x in lists])
+    cur = np.asarray(lists[order[0]])
+    total = 0.0
+    for i in order[1:]:
+        cur, w = lookup_intersect(cur, bucketize(lists[i], universe, bucket_size))
+        total += w["total"]
+    return cur, total
 
 
 def adaptive_intersect(

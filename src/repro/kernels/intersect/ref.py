@@ -15,13 +15,25 @@ import numpy as np
 # numpy scalar (not a jax array) so kernels can close over it as a literal
 PAD = np.int32(2**31 - 1)
 
-__all__ = ["intersect_count_ref", "PAD"]
+__all__ = ["intersect_count_ref", "intersect_members_ref", "PAD"]
+
+
+@jax.jit
+def intersect_members_ref(short: jnp.ndarray, long: jnp.ndarray) -> jnp.ndarray:
+    """Per-element membership of ``short`` rows in ``long`` rows.
+
+    Same contract as :func:`intersect_count_ref` but returns the boolean
+    hit mask (B, Ls) instead of its row sum — the pairwise *select* step
+    of a k-way intersection fold (``repro.core.batched_query``).  Only the
+    ``long`` rows must be sorted; ``short`` elements are searched
+    independently, and PAD never matches.
+    """
+    pos = jax.vmap(jnp.searchsorted)(long, short)
+    pos = jnp.minimum(pos, long.shape[1] - 1)
+    return (jnp.take_along_axis(long, pos, axis=1) == short) & (short != PAD)
 
 
 @jax.jit
 def intersect_count_ref(short: jnp.ndarray, long: jnp.ndarray) -> jnp.ndarray:
     """Vectorized binary search of each short element into the long row."""
-    pos = jax.vmap(jnp.searchsorted)(long, short)
-    pos = jnp.minimum(pos, long.shape[1] - 1)
-    hit = (jnp.take_along_axis(long, pos, axis=1) == short) & (short != PAD)
-    return hit.sum(axis=1).astype(jnp.int32)
+    return intersect_members_ref(short, long).sum(axis=1).astype(jnp.int32)

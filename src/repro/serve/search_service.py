@@ -10,13 +10,18 @@ The paper's two-level query algorithm as a serving system:
   * a query batch is broadcast, every shard intersects the posting
     segments of its local clusters, counts are combined with one psum.
 
-Two execution paths with the same contract, both on the batched
-two-level planner (``repro.core.batched_query`` — no per-query loop):
+Queries are arbitrary-arity conjunctions (``repro.core.queries``): the
+historical ``(n, 2)`` term-pair array, the padded ``(n, max_arity)``
+form, or a ``ConjunctiveQueries``.  Two execution paths with the same
+contract, both on the batched planner (``repro.core.batched_query`` — no
+per-query loop):
   * ``serve_counts``       — host path (vectorized numpy Lookup, exact
     work metric, bit-identical to looping ``ClusterIndex.query``);
-  * ``pack`` + ``device_counts`` — device path: fixed-shape padded segment
-    batches + ``shard_map`` over cluster shards, Pallas/jnp intersection
-    kernels. Used by the serving dry-run and the wall-clock benchmark.
+  * ``pack`` + ``device_counts`` — device path: fixed-shape padded
+    rank-r segment blocks + ``shard_map`` over cluster shards.  All-pair
+    batches run the single Pallas/jnp ``intersect_count`` reduction (the
+    historical layout); mixed/higher arities fold the blocks pairwise
+    with a masked membership select before counting survivors.
 """
 
 from __future__ import annotations
@@ -30,6 +35,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.batched_query import batched_query, gather_padded, plan_segment_pairs
+from repro.core.queries import as_queries
 from repro.core.seclud import SecludResult
 from repro.dist import sharding as sh
 from repro.kernels.intersect.ref import PAD
@@ -39,13 +45,25 @@ __all__ = ["SearchService", "PackedClusters"]
 
 @dataclasses.dataclass
 class PackedClusters:
-    """Device-resident layout: for each (query, cluster-of-query) pair the
-    two posting segments, padded to fixed widths and stacked."""
+    """Device-resident layout: for each (query, cluster-of-query) group
+    the cost-ordered posting segments, padded to fixed per-rank widths and
+    stacked.  ``segments[r]`` is the (R, L_r) rank-r block; rows whose
+    query has fewer than r + 1 terms are all-PAD."""
 
-    short: np.ndarray  # (R, Ls)
-    long: np.ndarray  # (R, Ll)
+    segments: Tuple[np.ndarray, ...]
     row_query: np.ndarray  # (R,) query id of each row
+    row_arity: np.ndarray  # (R,) int32 — segments actually present per row
     n_queries: int
+
+    @property
+    def short(self) -> np.ndarray:
+        """Rank-0 block (the probing side of every row's chain)."""
+        return self.segments[0]
+
+    @property
+    def long(self) -> np.ndarray:
+        """Rank-1 block — THE long side for the historical 2-term pack."""
+        return self.segments[1]
 
 
 class SearchService:
@@ -54,37 +72,47 @@ class SearchService:
 
     # -- host path -------------------------------------------------------
 
-    def serve_counts(self, queries: np.ndarray) -> Tuple[np.ndarray, dict]:
+    def serve_counts(self, queries) -> Tuple[np.ndarray, dict]:
         """Exact per-query result counts via the two-level cluster index.
 
         One vectorized engine pass (``repro.core.batched_query``) — counts
-        and total work are bit-identical to looping ``cluster_index.query``.
+        and total work are bit-identical to looping ``cluster_index.query``
+        over the conjunctions.
         """
-        ptr, _docs, work = batched_query(self.res.cluster_index, np.asarray(queries))
+        ptr, _docs, work = batched_query(self.res.cluster_index, queries)
         return np.diff(ptr).astype(np.int64), {"work": work["total"]}
 
     # -- device path ------------------------------------------------------
 
-    def pack(self, queries: np.ndarray, pad_to: int = 128) -> PackedClusters:
+    def pack(self, queries, pad_to: int = 128) -> PackedClusters:
         """Build the fixed-shape per-(query, cluster) segment batch.
 
-        Rows come from the batched planner (one CSR set-intersection for
-        the whole batch, no per-query loop).  An empty plan yields an
-        honestly-empty ``(0, pad_to)`` pack — never a fabricated PAD row
-        attributed to query 0.
+        Rows come from the batched planner (one CSR chain for the whole
+        batch, no per-query loop); each query contributes one row per
+        common cluster holding its ``arity`` cost-ordered segments.  An
+        empty plan yields an honestly-empty ``(0, pad_to)`` pack — never a
+        fabricated PAD row attributed to query 0.
         """
+        cq = as_queries(queries)
         cidx = self.res.cluster_index
-        plan = plan_segment_pairs(cidx, np.asarray(queries))
+        plan = plan_segment_pairs(cidx, cq)
         docs = cidx.index.post_docs
-        max_s = max(int(plan.short_len.max()) if plan.n_pairs else 0, pad_to)
-        max_l = max(int(plan.long_len.max()) if plan.n_pairs else 0, pad_to)
-        max_s = -(-max_s // pad_to) * pad_to
-        max_l = -(-max_l // pad_to) * pad_to
+        n_rows = plan.n_pairs
+        max_a = max(plan.max_arity, 2)  # always expose short+long blocks
+        segments = []
+        for r in range(max_a):
+            has = plan.arity > r
+            si = np.where(has, plan.seg_ptr[:-1] + r, 0)  # 0 = safe index
+            starts = plan.seg_start[si]
+            lens = np.where(has, plan.seg_len[si], 0)
+            width = max(int(lens.max()) if n_rows else 0, pad_to)
+            width = -(-width // pad_to) * pad_to
+            segments.append(gather_padded(docs, starts, lens, width))
         return PackedClusters(
-            short=gather_padded(docs, plan.short_start, plan.short_len, max_s),
-            long=gather_padded(docs, plan.long_start, plan.long_len, max_l),
+            segments=tuple(segments),
             row_query=plan.pair_query.astype(np.int32),
-            n_queries=len(queries),
+            row_arity=plan.arity.astype(np.int32),
+            n_queries=cq.n_queries,
         )
 
     @staticmethod
@@ -93,38 +121,54 @@ class SearchService:
         With a mesh, rows are sharded over the data axis and results
         combined with one psum_scatter-equivalent reduction."""
         from repro.kernels.intersect.ops import intersect_count
+        from repro.kernels.intersect.ref import intersect_members_ref
 
         nq = packed.n_queries
         if packed.short.shape[0] == 0:
             return jnp.zeros(nq, jnp.int32)
-        short = jnp.asarray(packed.short)
-        long = jnp.asarray(packed.long)
+        segs = tuple(jnp.asarray(b) for b in packed.segments)
         rq = jnp.asarray(packed.row_query)
+        ra = jnp.asarray(packed.row_arity)
+        pairs_only = bool((packed.row_arity == 2).all()) and len(segs) == 2
 
-        def local(short, long, rq):
-            c = intersect_count(short, long)
+        def local(segs, rq, ra):
+            if pairs_only:
+                # The historical 2-term layout: one kernel reduction.
+                c = intersect_count(segs[0], segs[1])
+            else:
+                # Masked pairwise fold: rows keep their running
+                # intersection in the rank-0 block; rank r filters it for
+                # rows with arity > r, then survivors are counted.
+                cur = segs[0]
+                for r in range(1, len(segs)):
+                    hit = intersect_members_ref(cur, segs[r])
+                    active = (ra > r)[:, None]
+                    cur = jnp.where(active & ~hit, PAD, cur)
+                c = (cur != PAD).sum(axis=1).astype(jnp.int32)
             return jax.ops.segment_sum(c, rq, num_segments=nq)
 
         if mesh is None:
-            return local(short, long, rq)
+            return local(segs, rq, ra)
         # Row sharding over ALL data axes (pod included on multi-pod
         # meshes) comes from the distribution substrate, so serving and
         # training agree on what "data-parallel" means.
         dp_axes = sh.batch_axes(mesh)
         dp = sh.data_spec(mesh)
-        pad = sh.shard_rows(short.shape[0], mesh)
+        pad = sh.shard_rows(segs[0].shape[0], mesh)
         if pad:
-            short = jnp.pad(short, ((0, pad), (0, 0)), constant_values=PAD)
-            long = jnp.pad(long, ((0, pad), (0, 0)), constant_values=PAD)
+            segs = tuple(
+                jnp.pad(s, ((0, pad), (0, 0)), constant_values=PAD) for s in segs
+            )
             # Padding rows carry query id nq (out of range): segment_sum
             # drops them by construction instead of crediting query 0.
             rq = jnp.pad(rq, (0, pad), constant_values=nq)
+            ra = jnp.pad(ra, (0, pad), constant_values=0)
         from jax.experimental.shard_map import shard_map
 
         fn = shard_map(
-            lambda s, l, r: jax.lax.psum(local(s, l, r), dp_axes),
+            lambda s, r, a: jax.lax.psum(local(s, r, a), dp_axes),
             mesh=mesh,
-            in_specs=(P(dp, None), P(dp, None), P(dp)),
+            in_specs=(tuple(P(dp, None) for _ in segs), P(dp), P(dp)),
             out_specs=P(),
         )
-        return fn(short, long, rq)
+        return fn(segs, rq, ra)

@@ -1,4 +1,6 @@
 import os
+import sys
+from pathlib import Path
 
 # Must be set before jax first initializes its backend: the mesh tests
 # (e.g. the (4,2) mesh in test_cluster_dist.py, (2,4) in test_flash_decode)
@@ -6,6 +8,12 @@ import os
 # environment (TPU runs) can still override.
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# `benchmarks` is a repo-root package (not installed by `pip install -e .`,
+# which only ships src/): put the root on sys.path so the perf-gate tests
+# can import benchmarks.compare under bare `pytest` as well as
+# `python -m pytest`.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 import numpy as np
 import pytest

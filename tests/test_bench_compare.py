@@ -1,0 +1,125 @@
+"""The CI perf-regression gate must demonstrably trip on an injected
+slowdown (and stay quiet on healthy runs)."""
+
+import json
+
+from benchmarks.compare import compare, engine_speedups, main
+
+
+def _doc(speedups, total_seconds=30.0, errors=()):
+    rows = [
+        {
+            "name": name,
+            "us_per_call": 100.0,
+            "derived": f"loop_s=1.0;host_s=0.05;host_speedup={s:.1f}x;pad_overhead=1.5",
+        }
+        for name, s in speedups.items()
+    ]
+    return {
+        "suites": ["speedups"],
+        "quick": True,
+        "total_seconds": total_seconds,
+        "rows": rows,
+        "errors": list(errors),
+    }
+
+
+BASE = {
+    "speedups/forum/batched_engine/n1000": 20.0,
+    "speedups/forum/batched_engine_a3/n1000": 15.0,
+    "speedups/forum/batched_engine_a5/n1000": 12.0,
+}
+
+
+def test_engine_speedups_parses_rows():
+    doc = _doc(BASE)
+    assert engine_speedups(doc) == BASE
+    # non-engine rows are ignored
+    doc["rows"].append({"name": "speedups/forum/topdown/k16", "derived": "S_T=2"})
+    assert engine_speedups(doc) == BASE
+
+
+def test_gate_passes_on_healthy_run():
+    assert compare(_doc(BASE), _doc(BASE)) == []
+    # mild noise within 25% passes
+    noisy = {k: v * 0.8 for k, v in BASE.items()}
+    assert compare(_doc(BASE), _doc(noisy, total_seconds=36.0)) == []
+    # faster is always fine
+    faster = {k: v * 3 for k, v in BASE.items()}
+    assert compare(_doc(BASE), _doc(faster, total_seconds=10.0)) == []
+
+
+def test_gate_trips_on_injected_speedup_regression():
+    slow = dict(BASE)
+    slow["speedups/forum/batched_engine/n1000"] = 20.0 * 0.5  # injected 2x slowdown
+    fails = compare(_doc(BASE), _doc(slow))
+    assert len(fails) == 1
+    assert "batched_engine/n1000" in fails[0] and "regressed" in fails[0]
+
+
+def test_gate_trips_on_wallclock_regression():
+    fails = compare(_doc(BASE), _doc(BASE, total_seconds=30.0 * 1.5))
+    assert any("wall-clock" in m for m in fails)
+
+
+def test_wallclock_tolerance_is_independent():
+    """CI judges wall-clock loosely (cross-machine baseline) without
+    loosening the speedup-ratio gate."""
+    slow_clock = _doc(BASE, total_seconds=30.0 * 2.0)
+    assert compare(_doc(BASE), slow_clock, max_wallclock_regression=1.5) == []
+    # ... the speedup gate still trips at its own threshold
+    slow_ratio = {k: v * 0.5 for k, v in BASE.items()}
+    fails = compare(
+        _doc(BASE), _doc(slow_ratio), max_wallclock_regression=1.5
+    )
+    assert len(fails) == 3 and all("regressed" in m for m in fails)
+
+
+def test_gate_trips_on_missing_row_and_errors():
+    partial = {k: v for k, v in BASE.items() if "a5" not in k}
+    fails = compare(_doc(BASE), _doc(partial))
+    assert any("disappeared" in m for m in fails)
+    fails = compare(_doc(BASE), _doc(BASE, errors=[{"suite": "kernels", "error": "boom"}]))
+    assert any("kernels" in m for m in fails)
+
+
+def test_gate_trips_on_empty_baseline():
+    assert compare(_doc({}), _doc(BASE)) != []
+
+
+def test_main_exit_codes(tmp_path):
+    base_p = tmp_path / "BENCH_baseline.json"
+    fresh_p = tmp_path / "BENCH_smoke.json"
+    base_p.write_text(json.dumps(_doc(BASE)))
+
+    fresh_p.write_text(json.dumps(_doc(BASE)))
+    assert main([str(fresh_p), "--baseline", str(base_p)]) == 0
+
+    slow = {k: v * 0.5 for k, v in BASE.items()}
+    fresh_p.write_text(json.dumps(_doc(slow)))
+    assert main([str(fresh_p), "--baseline", str(base_p)]) == 1
+    # a looser threshold lets the same run through
+    assert main(
+        [str(fresh_p), "--baseline", str(base_p), "--max-regression", "0.6"]
+    ) == 0
+
+    # --update re-baselines and the gate goes green again
+    assert main([str(fresh_p), "--baseline", str(base_p), "--update"]) == 0
+    assert main([str(fresh_p), "--baseline", str(base_p)]) == 0
+
+
+def test_repo_baseline_is_committed_and_gateable():
+    """The committed baseline must contain every batched_engine row the
+    smoke suite produces (arity 2, 3, 5)."""
+    from benchmarks.compare import DEFAULT_BASELINE, load
+
+    assert DEFAULT_BASELINE.exists(), "BENCH_baseline.json must be committed"
+    doc = load(DEFAULT_BASELINE)
+    sp = engine_speedups(doc)
+    names = "\n".join(sp)
+    assert any("/batched_engine/" in n for n in sp), names
+    assert any("/batched_engine_a3/" in n for n in sp), names
+    assert any("/batched_engine_a5/" in n for n in sp), names
+    assert all(v > 1.0 for v in sp.values())  # the engine must actually win
+    assert float(doc["total_seconds"]) > 0
+    assert not doc.get("errors")

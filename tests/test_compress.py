@@ -47,6 +47,45 @@ def test_encode_decode_property(gaps, code):
     assert np.array_equal(decode_gaps(packed, nbits, len(gaps), code), gaps)
 
 
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(1, 512), min_size=1, max_size=60),
+    st.integers(1, 4096),
+)
+def test_golomb_roundtrip_property(quotient_scale, b):
+    """Golomb round-trips for ANY parameter b >= 1, not just the tuned
+    values — the truncated-binary remainder path has off-by-one room.
+    Gaps are drawn relative to b (unary quotient <= 512 bits) so the
+    bit-at-a-time reference encoder stays fast while still covering every
+    remainder / quotient combination that matters."""
+    rng = np.random.default_rng(len(quotient_scale) * 4099 + b)
+    q = np.asarray(quotient_scale, dtype=np.int64) - 1
+    r = rng.integers(0, b, size=len(q))
+    gaps = q * b + r + 1  # every (quotient, remainder) pair reachable
+    packed, nbits = encode_gaps(gaps, "golomb", b=b)
+    assert np.array_equal(decode_gaps(packed, nbits, len(gaps), "golomb", b=b), gaps)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(0, 1 << 20), min_size=1, max_size=80, unique=True),
+    st.sampled_from(["gamma", "delta", "varbyte", "golomb"]),
+)
+def test_posting_bits_equals_packed_length_property(doc_ids, code):
+    """The vectorized bit COUNT must equal the measured length of the
+    bit-exact encoder's output, for every code, on arbitrary doc-id sets."""
+    postings = np.sort(np.asarray(doc_ids, dtype=np.int64))
+    n_docs = int(postings[-1]) + 1
+    counted = posting_bits(postings, n_docs, code)
+    b = golomb_parameter(n_docs, len(postings)) if code == "golomb" else None
+    packed, nbits = encode_gaps(gaps_of(postings), code, b=b)
+    assert counted == nbits
+    # and the packed array really holds exactly ceil(nbits / 8) bytes
+    assert len(packed) == -(-nbits // 8)
+    got = decode_gaps(packed, nbits, len(postings), code, b=b)
+    assert np.array_equal(np.cumsum(got) - 1, postings)
+
+
 def test_bit_count_matches_encoder(rng):
     """Vectorized bit counting == exact encoder length."""
     postings = np.sort(rng.choice(100_000, size=500, replace=False))

@@ -1,0 +1,380 @@
+"""Arbitrary-arity conjunctive queries: representation, cost-ordered
+plans, and the full engine equivalence chain.
+
+The contract under test: on any corpus, for any ragged batch of
+conjunctive queries with arities 1..5 (duplicate terms, absent terms and
+empty posting lists included),
+
+    ClusterIndex.query(*terms)  ≡  query_all_clusters(*terms)
+        ≡  brute chained np.intersect1d
+        ≡  batched_query (docs + work dicts, bit-identical)
+        ≡  batched_counts (per-query counts)
+        ≡  SearchService.pack + device_counts
+
+and the single-index ``batched_lookup`` matches the cost-ordered
+``lookup_intersect`` chain exactly.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
+
+from repro.core.batched_query import batched_counts, batched_lookup, batched_query
+from repro.core.cluster_index import build_cluster_index, cost_order
+from repro.core.queries import QUERY_PAD, ConjunctiveQueries, as_queries
+from repro.core.reorder import cluster_ranges, reorder_permutation
+from repro.data.corpus import Corpus
+from repro.index.build import build_index, permute_docs
+from repro.index.lookup import bucketize, lookup_intersect
+
+
+# ----------------------------------------------------------------------
+# Representation
+# ----------------------------------------------------------------------
+
+
+def test_conjunctive_queries_roundtrip():
+    cq = ConjunctiveQueries.from_lists([[3], [1, 2], [5, 4, 5, 9]])
+    assert cq.n_queries == 3
+    assert cq.arities.tolist() == [1, 2, 4]
+    assert cq.max_arity == 4
+    assert cq.terms(2).tolist() == [5, 4, 5, 9]
+    pad = cq.padded()
+    assert pad.shape == (3, 4)
+    assert pad[0].tolist() == [3, QUERY_PAD, QUERY_PAD, QUERY_PAD]
+    back = ConjunctiveQueries.from_padded(pad)
+    assert np.array_equal(back.q_ptr, cq.q_ptr)
+    assert np.array_equal(back.q_terms, cq.q_terms)
+
+
+def test_as_queries_accepts_all_forms():
+    arr = np.array([[1, 2], [3, 4]])
+    for form in (arr, ConjunctiveQueries.from_padded(arr), [[1, 2], [3, 4]]):
+        cq = as_queries(form)
+        assert cq.n_queries == 2 and cq.q_terms.tolist() == [1, 2, 3, 4]
+    empty = as_queries(np.empty((0, 2), np.int64))
+    assert empty.n_queries == 0 and empty.max_arity == 0
+
+
+def test_as_queries_rejects_bad_input():
+    with pytest.raises(ValueError):
+        as_queries([1, 2, 3])  # flat scalars: ambiguous
+    with pytest.raises(ValueError):
+        ConjunctiveQueries.from_padded(np.full((1, 2), QUERY_PAD))  # arity 0
+    with pytest.raises(ValueError):
+        ConjunctiveQueries(q_ptr=np.array([0, 0]), q_terms=np.zeros(0, np.int64))
+
+
+def test_cost_order_is_stable_ascending():
+    assert cost_order([5, 2, 9, 2]) == [1, 3, 0, 2]
+    assert cost_order([4, 4]) == [0, 1]  # ties keep term order
+    assert cost_order([7]) == [0]
+
+
+# ----------------------------------------------------------------------
+# Engine equivalence chain
+# ----------------------------------------------------------------------
+
+
+def _random_setup(rng, n_docs, n_terms, k, mean_len=12):
+    doc_lens = rng.integers(1, 2 * mean_len, n_docs)
+    rows = []
+    ptr = [0]
+    for d in range(n_docs):
+        r = np.unique(rng.integers(0, n_terms, doc_lens[d]))
+        rows.append(r)
+        ptr.append(ptr[-1] + len(r))
+    corpus = Corpus(
+        doc_ptr=np.asarray(ptr, np.int64),
+        doc_terms=np.concatenate(rows).astype(np.int32),
+        n_terms=n_terms,
+    )
+    assign = rng.integers(0, k, n_docs)
+    assign[rng.integers(0, n_docs)] = k - 1
+    perm = reorder_permutation(assign, k)
+    ranges = cluster_ranges(assign, k)
+    index = build_index(corpus)
+    reordered = permute_docs(index, perm)
+    cidx = build_cluster_index(reordered, ranges)
+    return index, reordered, cidx, perm
+
+
+def _random_ragged_queries(rng, n_q, n_terms, max_arity=5):
+    """Arities 1..max_arity, with occasional duplicate terms."""
+    lists = []
+    for _ in range(n_q):
+        a = int(rng.integers(1, max_arity + 1))
+        t = rng.integers(0, n_terms, a).tolist()
+        if a >= 2 and rng.random() < 0.25:
+            t[1] = t[0]  # duplicate term: ∩ is idempotent
+        lists.append(t)
+    return ConjunctiveQueries.from_lists(lists)
+
+
+def _assert_multiterm_engine_matches_loop(index, cidx, perm, cq):
+    inv = np.empty(len(perm), np.int64)
+    inv[perm] = np.arange(len(perm))
+    ptr, docs, work = batched_query(cidx, cq)
+    counts, _ = batched_counts(cidx, cq)
+    assert np.array_equal(counts, np.diff(ptr))
+    cl = pr = sc = 0.0
+    for i, terms in enumerate(cq):
+        want = index.postings(int(terms[0]))
+        for t in terms[1:]:
+            want = np.intersect1d(want, index.postings(int(t)))
+        r1, w1 = cidx.query(*terms)
+        r2, w2 = cidx.query_all_clusters(*terms)
+        got = docs[ptr[i] : ptr[i + 1]]
+        assert np.array_equal(got, r1)  # bit-identical to the loop
+        assert np.array_equal(np.sort(inv[r1]), want)
+        assert np.array_equal(np.sort(inv[r2]), want)
+        cl += w1["cluster_level"]
+        pr += w1["probes"]
+        sc += w1["scanned"]
+    assert work["cluster_level"] == cl
+    assert work["probes"] == pr and work["scanned"] == sc
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_multiterm_equivalence_random_corpora(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    n_docs = data.draw(st.integers(50, 300))
+    n_terms = data.draw(st.integers(20, 250))
+    k = data.draw(st.integers(1, 12))
+    index, reordered, cidx, perm = _random_setup(rng, n_docs, n_terms, k)
+    n_q = data.draw(st.integers(1, 30))
+    cq = _random_ragged_queries(rng, n_q, n_terms)
+    _assert_multiterm_engine_matches_loop(index, cidx, perm, cq)
+
+
+def test_multiterm_absent_terms_and_empty_postings(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 150, 500, k=8)
+    df = np.diff(index.post_ptr)
+    empty = np.flatnonzero(df == 0)
+    alive = np.flatnonzero(df > 0)
+    assert len(empty) >= 3
+    cq = ConjunctiveQueries.from_lists(
+        [
+            [int(empty[0])],  # single absent term
+            [int(empty[0]), int(empty[1]), int(empty[2])],  # all absent
+            [int(alive[0]), int(empty[0]), int(alive[1])],  # mixed
+            [int(alive[0]), int(alive[1]), int(alive[2])],
+            [int(alive[3])],  # single-term query: all its postings
+        ]
+    )
+    ptr, docs, work = batched_query(cidx, cq)
+    assert ptr[1] == 0 and ptr[2] == 0 and ptr[3] == 0  # absent ⇒ empty
+    inv = np.empty(len(perm), np.int64)
+    inv[perm] = np.arange(len(perm))
+    want = index.postings(int(alive[3]))
+    assert np.array_equal(np.sort(inv[docs[ptr[4] : ptr[5]]]), want)
+    _assert_multiterm_engine_matches_loop(index, cidx, perm, cq)
+
+
+def test_multiterm_single_cluster_k1(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 200, 80, k=1)
+    cq = _random_ragged_queries(rng, 25, 80)
+    assert cidx.k == 1
+    _assert_multiterm_engine_matches_loop(index, cidx, perm, cq)
+
+
+def test_query_accepts_iterable_and_rejects_empty(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 100, 40, k=4)
+    r1, w1 = cidx.query(3, 7, 11)
+    r2, w2 = cidx.query([3, 7, 11])
+    assert np.array_equal(r1, r2) and w1 == w2
+    with pytest.raises(ValueError):
+        cidx.query()
+
+
+def test_batched_lookup_multiterm_matches_chain(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 250, 100, k=6)
+    cq = _random_ragged_queries(rng, 60, 100)
+    ptr, docs, work = batched_lookup(index, cq, bucket_size=16)
+    probes = scanned = 0.0
+    for i, terms in enumerate(cq):
+        lists = [index.postings(int(t)) for t in terms]
+        order = cost_order([len(x) for x in lists])
+        cur = lists[order[0]]
+        for j in order[1:]:
+            cur, w = lookup_intersect(cur, bucketize(lists[j], index.n_docs, 16))
+            probes += w["probes"]
+            scanned += w["scanned"]
+        assert np.array_equal(docs[ptr[i] : ptr[i + 1]], cur)
+    assert work["probes"] == probes and work["scanned"] == scanned
+
+
+def test_padded_and_ragged_forms_agree(rng):
+    index, reordered, cidx, perm = _random_setup(rng, 120, 60, k=5)
+    cq = _random_ragged_queries(rng, 30, 60)
+    ptr_r, docs_r, work_r = batched_query(cidx, cq)
+    ptr_p, docs_p, work_p = batched_query(cidx, cq.padded())
+    assert np.array_equal(ptr_r, ptr_p)
+    assert np.array_equal(docs_r, docs_p)
+    assert work_r == work_p
+
+
+# ----------------------------------------------------------------------
+# Serving layer
+# ----------------------------------------------------------------------
+
+
+def test_search_service_multiterm(rng):
+    from repro.serve.search_service import SearchService
+
+    index, reordered, cidx, perm = _random_setup(rng, 400, 150, k=8)
+
+    class _Res:  # only the cluster index matters for serving
+        cluster_index = cidx
+
+    svc = SearchService(_Res())
+    cq = _random_ragged_queries(rng, 40, 150)
+    counts, work = svc.serve_counts(cq)
+    total = 0.0
+    for i, terms in enumerate(cq):
+        r, w = cidx.query(*terms)
+        assert counts[i] == len(r)
+        total += w["total"]
+    assert work["work"] == total
+    packed = svc.pack(cq)
+    assert len(packed.segments) == max(cq.max_arity, 2)
+    dev = np.asarray(SearchService.device_counts(packed))
+    np.testing.assert_array_equal(dev, counts)
+
+
+def test_search_service_multiterm_sharded(rng):
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.serve.search_service import SearchService
+
+    index, reordered, cidx, perm = _random_setup(rng, 300, 100, k=6)
+
+    class _Res:
+        cluster_index = cidx
+
+    svc = SearchService(_Res())
+    cq = _random_ragged_queries(rng, 24, 100, max_arity=4)
+    counts, _ = svc.serve_counts(cq)
+    packed = svc.pack(cq)
+    mesh = Mesh(np.asarray(jax.devices()).reshape(-1, 1), ("data", "model"))
+    dev = np.asarray(SearchService.device_counts(packed, mesh=mesh))
+    np.testing.assert_array_equal(dev, counts)
+
+
+def test_filtered_retriever_three_terms():
+    from repro.serve.retrieval import FilteredRetriever, items_as_corpus
+
+    rng = np.random.default_rng(0)
+    n_items, n_attrs = 2500, 150
+    item_attrs = [
+        np.unique(rng.choice(n_attrs, size=rng.integers(2, 12)))
+        for _ in range(n_items)
+    ]
+    items = items_as_corpus(item_attrs, n_attrs)
+    r = FilteredRetriever(items, k=16, tc=200)
+    a, b, c = 3, 7, 11
+    got, report = r.filter(a, b, c)
+    want = [i for i, s in enumerate(item_attrs) if a in s and b in s and c in s]
+    assert sorted(got.tolist()) == want
+    assert report.n_filtered == len(want)
+    assert report.filter_work > 0 and report.baseline_work > 0
+
+    # A single-attribute filter intersects nothing: both systems just
+    # emit the posting list, so the report prices them equally (1.0x)
+    # instead of baseline_work=0 rendering as a 0.0x "regression".
+    got1, report1 = r.filter(a)
+    want1 = [i for i, s in enumerate(item_attrs) if a in s]
+    assert sorted(got1.tolist()) == want1
+    assert report1.baseline_work == report1.filter_work == len(want1)
+    assert report1.speedup == 1.0
+
+
+# ----------------------------------------------------------------------
+# Multi-term query logs + evaluate
+# ----------------------------------------------------------------------
+
+
+def test_synth_query_log_multiterm(small_corpus):
+    from repro.data.query_log import synth_query_log
+
+    log = synth_query_log(
+        small_corpus, n_queries=200, seed=3, arity=(2, 3, 5),
+        arity_weights=(0.5, 0.3, 0.2),
+    )
+    assert log.queries.shape == (200, 5)
+    ar = log.arities()
+    assert set(np.unique(ar)) <= {2, 3, 5}
+    assert (ar >= 2).all()
+    # terms within a query are distinct and alive
+    df = small_corpus.term_doc_freq()
+    for row in log.queries:
+        t = row[row != QUERY_PAD]
+        assert len(np.unique(t)) == len(t)
+        assert (df[t] > 0).all()
+    # the padded form round-trips through the CSR form
+    cq = log.as_conjunctive()
+    assert cq.n_queries == 200 and np.array_equal(cq.arities, ar)
+
+
+def test_synth_query_log_arity2_unchanged(small_corpus):
+    """The default 2-term sampler is bit-for-bit the historical one."""
+    from repro.data.query_log import synth_query_log
+
+    a = synth_query_log(small_corpus, n_queries=120, seed=11)
+    b = synth_query_log(small_corpus, n_queries=120, seed=11, arity=2)
+    assert np.array_equal(a.queries, b.queries)
+    assert a.queries.shape == (120, 2)
+
+
+def test_evaluate_multiterm_batched_matches_loop(small_corpus):
+    from repro.core.seclud import SecludPipeline
+    from repro.data.query_log import synth_query_log
+
+    log = synth_query_log(small_corpus, n_queries=400, seed=5, arity=(2, 3))
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    res = pipe.fit(small_corpus, k=10, algo="topdown", log=log)
+    ev_loop = pipe.evaluate(small_corpus, res, log, max_queries=60)
+    ev_bat = pipe.evaluate(small_corpus, res, log, max_queries=60, batched=True)
+    for key in ("S_T", "S_C", "S_R", "work_baseline", "work_cluster_index",
+                "work_reordered"):
+        assert ev_loop[key] == ev_bat[key], key
+    assert ev_loop["S_C"] > 0 and ev_loop["S_R"] > 0
+
+
+def test_query_set_cost_multiterm(small_corpus):
+    from repro.core.objective import query_set_cost
+
+    rng = np.random.default_rng(2)
+    alive = np.flatnonzero(small_corpus.term_doc_freq() > 0)
+    q2 = rng.choice(alive, (40, 2))
+    # 2-term cost equals the historical pairwise formula
+    from repro.index.intersect import pair_cost
+
+    base = query_set_cost(small_corpus, None, 1, q2)
+    df = small_corpus.term_doc_freq()
+    want = pair_cost(df[q2[:, 0]], df[q2[:, 1]]).sum()
+    assert base == pytest.approx(float(want))
+    # single-term queries cost nothing; higher arity costs at least as
+    # much as its cheapest pair and clustering never increases the cost
+    q1 = ConjunctiveQueries.from_lists([[int(alive[0])], [int(alive[1])]])
+    assert query_set_cost(small_corpus, None, 1, q1) == 0.0
+    q3 = ConjunctiveQueries.from_lists(
+        [rng.choice(alive, 3, replace=False).tolist() for _ in range(25)]
+    )
+    base3 = query_set_cost(small_corpus, None, 1, q3)
+    assign = rng.integers(0, 8, small_corpus.n_docs)
+    clus3 = query_set_cost(small_corpus, assign, 8, q3)
+    assert clus3 <= base3 + 1e-9
+    assert base3 > 0
+
+
+def test_reorder_permutation_validates_k(rng):
+    assign = np.array([0, 2, 1, 2])
+    perm = reorder_permutation(assign, 3)
+    assert sorted(perm.tolist()) == [0, 1, 2, 3]
+    with pytest.raises(ValueError):
+        reorder_permutation(assign, 2)  # stale k: assignment has cluster 2
+    with pytest.raises(ValueError):
+        reorder_permutation(np.array([0, -1]), 2)
