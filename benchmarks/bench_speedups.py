@@ -3,7 +3,20 @@ clusters k, for flat-multilevel (FM) and TopDown (TD) clustering —
 plus the wall-clock rows of the batched conjunctive-query engine vs the
 per-query Python loop (``batched_engine*``, part of the CI smoke set):
 the historical 2-term row and arity-3 / arity-5 rows exercising the
-cost-ordered k-way chain."""
+cost-ordered k-way chain.
+
+Two further row families (also in the smoke set):
+
+* ``hier_engine/L{1,2,3}`` — the arbitrary-depth hierarchical index
+  (``repro.core.hier_index``) at depths 1 (flat Lookup), 2 (the paper's
+  cluster index) and 3 (super-clusters): exactness is asserted across
+  depths and against ``np.intersect1d``, and the rows report the
+  work/wall-clock trade-off as depth grows.
+* ``adaptive_vs_lookup`` — the paper's §6 future-work symmetric Lookup
+  (``adaptive_intersect``), measured (it was implemented and tested but
+  never benchmarked) against ``lookup_intersect`` on the clustered
+  (reordered) vs random document orderings.
+"""
 
 import numpy as np
 
@@ -11,6 +24,7 @@ from benchmarks.common import corpus_and_log, row, timed
 from repro.core.batched_query import batched_counts, batched_query
 from repro.core.seclud import SecludPipeline
 from repro.data.query_log import synth_query_log
+from repro.index.lookup import adaptive_intersect, lookup_work
 
 
 def _batched_engine_row(corpus_name, res, queries, suffix=""):
@@ -36,6 +50,95 @@ def _batched_engine_row(corpus_name, res, queries, suffix=""):
     )
 
 
+def _hier_engine_rows(corpus_name, pipe, corpus, log, k, n_queries, index, prefit=None):
+    """L ∈ {1, 2, 3} rows through the batched hierarchical engine: every
+    depth must return the identical result sets (asserted, plus an
+    ``np.intersect1d`` spot oracle); the derived fields record how work
+    shifts between the cluster levels and the postings as depth grows.
+    ``prefit`` maps a depth to an already-fitted ``(result, fit_seconds)``
+    — the sweep's last TopDown fit IS the L = 2 fit, so it is reused
+    rather than re-run."""
+    cq = log.as_conjunctive()[:n_queries]
+    rows = []
+    ref = None
+    for levels in (1, 2, 3):
+        if prefit and levels in prefit:
+            res, t_fit = prefit[levels]
+        else:
+            res, t_fit = timed(
+                pipe.fit, corpus, k, algo="topdown", log=log, levels=levels,
+                repeats=1,
+            )
+        hidx = res.hier_index
+        assert hidx.depth == levels
+        (ptr, docs, work), t_host = timed(batched_query, hidx, cq, repeats=3)
+        # Canonicalize in original-id space: exactness across depths.
+        inv = np.empty(len(res.perm), np.int64)
+        inv[res.perm] = np.arange(len(res.perm))
+        counts = np.diff(ptr)
+        qid = np.repeat(np.arange(cq.n_queries), counts)
+        canon = inv[docs]
+        canon = canon[np.lexsort((canon, qid))]
+        if ref is None:
+            ref = (counts, canon)
+            for i in range(0, cq.n_queries, max(cq.n_queries // 5, 1)):
+                terms = cq.terms(i)
+                want = index.postings(int(terms[0]))
+                for t in terms[1:]:
+                    want = np.intersect1d(want, index.postings(int(t)))
+                got = np.sort(inv[docs[ptr[i] : ptr[i + 1]]])
+                assert np.array_equal(got, want), f"hier L=1 oracle, query {i}"
+        else:
+            assert np.array_equal(ref[0], counts), f"hier L={levels} counts"
+            assert np.array_equal(ref[1], canon), f"hier L={levels} results"
+        level_ks = "-".join(str(lev.k) for lev in hidx.levels) or "1"
+        rows.append(
+            row(
+                f"speedups/{corpus_name}/hier_engine/L{levels}",
+                t_host,
+                f"k={level_ks};work={work['total']:.0f};"
+                f"cluster_level={work['cluster_level']:.0f};"
+                f"probes={work['probes']:.0f};scanned={work['scanned']:.0f};"
+                f"host_s={t_host:.4f};fit_s={t_fit:.2f}",
+            )
+        )
+    return rows
+
+
+def _adaptive_vs_lookup_row(corpus_name, res, queries, n_pairs=200):
+    """Work of the §6 ``adaptive_intersect`` vs plain ``lookup_intersect``
+    on the same 2-term queries, on the clustered (reordered) and random
+    (baseline) orderings — the measurement the implementation never had."""
+    pairs = [tuple(int(t) for t in q[:2]) for q in queries[:n_pairs]]
+    work = {}
+    for tag, idx in (("clus", res.reordered_index), ("rand", res.base_index)):
+        for algo, fn in (("lookup", lookup_work), ("adaptive", adaptive_intersect)):
+            total = 0
+            for t, u in pairs:
+                r, w = fn(idx.postings(t), idx.postings(u), idx.n_docs, 16)
+                total += w["total"]
+            work[f"{algo}_{tag}"] = total
+
+    def _run_clustered():
+        for t, u in pairs:
+            adaptive_intersect(
+                res.reordered_index.postings(t),
+                res.reordered_index.postings(u),
+                res.reordered_index.n_docs,
+                16,
+            )
+
+    _, t_adaptive = timed(_run_clustered, repeats=1)
+    return row(
+        f"speedups/{corpus_name}/adaptive_vs_lookup/n{len(pairs)}",
+        t_adaptive,
+        f"lookup_clus={work['lookup_clus']};adaptive_clus={work['adaptive_clus']};"
+        f"lookup_rand={work['lookup_rand']};adaptive_rand={work['adaptive_rand']};"
+        f"ratio_clus={work['adaptive_clus'] / max(work['lookup_clus'], 1):.3f};"
+        f"ratio_rand={work['adaptive_rand'] / max(work['lookup_rand'], 1):.3f}",
+    )
+
+
 def run(quick: bool = True, corpus_name: str = "forum"):
     n_docs = 12000 if quick else 48000
     ks = (16, 64, 256) if quick else (16, 64, 256, 1024)
@@ -45,6 +148,7 @@ def run(quick: bool = True, corpus_name: str = "forum"):
     pipe = SecludPipeline(tc=3000 if quick else 10000, doc_grained_below=512)
     rows = []
     last_td = None
+    last_td_fit_s = 0.0
     for algo in ("topdown", "flat"):
         for k in ks:
             if algo == "flat" and k > 256:
@@ -53,7 +157,7 @@ def run(quick: bool = True, corpus_name: str = "forum"):
                 pipe.fit, corpus, k, algo=algo, log=log, repeats=1
             )
             if algo == "topdown":
-                last_td = res
+                last_td, last_td_fit_s = res, t_fit
             ev = pipe.evaluate(corpus, res, log, max_queries=n_eval, batched=True)
             rows.append(
                 row(
@@ -82,4 +186,15 @@ def run(quick: bool = True, corpus_name: str = "forum"):
                 suffix=f"_a{arity}",
             )
         )
+    # Hierarchical engine at depths 1/2/3 (exactness asserted across
+    # depths) and the §6 adaptive-vs-lookup work measurement.
+    from repro.index.build import build_index
+
+    rows.extend(
+        _hier_engine_rows(
+            corpus_name, pipe, corpus, log, ks[-1], n_eval, build_index(corpus),
+            prefit={2: (last_td, last_td_fit_s)},
+        )
+    )
+    rows.append(_adaptive_vs_lookup_row(corpus_name, last_td, log.queries))
     return rows

@@ -20,6 +20,12 @@ engine's 22x win.  This gate fails the benchmark job when
     dropped is a hole in the trajectory, not a pass);
   * the fresh run recorded suite errors.
 
+Rows present in the fresh run but absent from the baseline are
+TOLERATED with a warning (never a failure): a PR adding benchmarks must
+not need a same-PR ``--update`` dance to stay green.  When such new rows
+exist the wall-clock check is skipped too — the stale baseline total
+cannot price work it never ran — and the warning says to re-baseline.
+
 Usage:
     python -m benchmarks.run --smoke --out BENCH_smoke.json
     python -m benchmarks.compare BENCH_smoke.json            # gate
@@ -58,15 +64,26 @@ def engine_speedups(doc: dict) -> Dict[str, float]:
     return out
 
 
+def row_names(doc: dict) -> set:
+    return {r.get("name", "") for r in doc.get("rows", [])}
+
+
 def compare(
     baseline: dict,
     fresh: dict,
     max_regression: float = 0.25,
     max_wallclock_regression: float | None = None,
+    warnings: List[str] | None = None,
 ) -> List[str]:
-    """Failure messages (empty = gate passes)."""
+    """Failure messages (empty = gate passes).
+
+    Pass a list as ``warnings`` to collect non-fatal notes (rows newer
+    than the baseline).
+    """
     if max_wallclock_regression is None:
         max_wallclock_regression = max_regression
+    if warnings is None:
+        warnings = []
     fails: List[str] = []
     base_sp = engine_speedups(baseline)
     fresh_sp = engine_speedups(fresh)
@@ -81,9 +98,25 @@ def compare(
                 f"{name}: host_speedup regressed {b:.1f}x -> {f:.1f}x "
                 f"(> {max_regression:.0%} drop)"
             )
+    # New rows are progress, not regressions: warn so someone re-baselines,
+    # never fail (a PR adding benches must not need a same-PR --update).
+    fresh_only = sorted(row_names(fresh) - row_names(baseline))
+    if fresh_only:
+        warnings.append(
+            f"{len(fresh_only)} row(s) not in the baseline (tolerated; "
+            "re-baseline with --update to start gating them): "
+            + ", ".join(fresh_only[:8])
+            + (", ..." if len(fresh_only) > 8 else "")
+        )
     bt = float(baseline.get("total_seconds", 0.0))
     ft = float(fresh.get("total_seconds", 0.0))
-    if bt > 0 and ft > bt * (1.0 + max_wallclock_regression):
+    if fresh_only:
+        if bt > 0:
+            warnings.append(
+                "wall-clock check skipped: the baseline total does not "
+                f"include the new rows (baseline {bt:.1f}s, fresh {ft:.1f}s)"
+            )
+    elif bt > 0 and ft > bt * (1.0 + max_wallclock_regression):
         fails.append(
             f"smoke wall-clock regressed {bt:.1f}s -> {ft:.1f}s "
             f"(> {max_wallclock_regression:.0%} growth)"
@@ -127,8 +160,13 @@ def main(argv: List[str] | None = None) -> int:
 
     baseline = load(args.baseline)
     fresh = load(args.fresh)
+    warnings: List[str] = []
     fails = compare(
-        baseline, fresh, args.max_regression, args.max_wallclock_regression
+        baseline,
+        fresh,
+        args.max_regression,
+        args.max_wallclock_regression,
+        warnings=warnings,
     )
     base_sp = engine_speedups(baseline)
     fresh_sp = engine_speedups(fresh)
@@ -144,6 +182,8 @@ def main(argv: List[str] | None = None) -> int:
         f"wall-clock: baseline {baseline.get('total_seconds', 0)}s -> "
         f"fresh {fresh.get('total_seconds', 0)}s"
     )
+    for w in warnings:
+        print(f"WARNING: {w}", file=sys.stderr)
     if fails:
         print("\nPERF GATE FAILED:", file=sys.stderr)
         for m in fails:

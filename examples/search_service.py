@@ -83,3 +83,36 @@ ragged = ConjunctiveQueries.from_lists(
 )
 counts, work = svc.serve_counts(ragged)
 print(f"ragged batch (arities {ragged.arities.tolist()}): counts {counts.tolist()}")
+
+# ---------------------------------------------------------------------------
+# Part 3 — a 3-level hierarchy: postings → clusters → super-clusters
+# ---------------------------------------------------------------------------
+# Depth is a parameter: fit(levels=3) recursively clusters the clusters,
+# and the top level doubles as a machine-level router.  Exactness is the
+# defining invariant — every depth returns the identical result sets.
+res3 = pipe.fit(corpus, k=64, algo="topdown", log=log, levels=3)
+hier = res3.hier_index
+print(
+    f"3-level index: {hier.levels[0].k} super-clusters over "
+    f"{hier.k} clusters over {corpus.n_docs} docs "
+    f"(psi per level: {[round(p, 1) for p in res3.psi_levels]})"
+)
+svc3 = SearchService(res3)
+counts3, work3 = svc3.serve_counts(queries)
+counts_l2, _ = svc.serve_counts(queries)
+assert np.array_equal(counts3, counts_l2), "every depth must return identical counts"
+docs3, qwork = hier.query(*log.queries[0])
+print(
+    f"3-level descent: {len(docs3)} hits, work {qwork['total']:.0f} "
+    f"(level_0 {qwork['level_0']:.0f} + level_1 {qwork['level_1']:.0f} "
+    f"+ postings {qwork['probes'] + qwork['scanned']:.0f})"
+)
+# Pin each super-cluster's device rows to a contiguous run (one mesh
+# shard under contiguous row sharding): counts are unchanged.
+pinned = svc3.pack(queries, pin_top=True)
+dev3 = np.asarray(SearchService.device_counts(pinned))
+assert np.array_equal(dev3, counts3), "pinned device path must be lossless"
+print(
+    f"pinned pack: {pinned.row_top.size} rows grouped into "
+    f"{len(np.unique(pinned.row_top))} top-level shards, counts agree ✓"
+)

@@ -11,11 +11,16 @@ conjunctive posting-list intersections get cheaper, losslessly.
 * ``topdown``       — hierarchical TopDown splitting (χ splitting factor)
 * ``queries``       — arbitrary-arity conjunctive query batches (ragged
                       CSR + padded forms)
-* ``cluster_index`` — two-level cluster index (query speedup S_C),
-                      cost-ordered plans for k >= 1 terms
-* ``batched_query`` — batched two-level engine: vectorized planning +
-                      length-bucketed kernel execution for whole query
-                      batches (bit-exact vs the per-query loop)
+* ``hier_index``    — arbitrary-depth hierarchical cluster index: the
+                      flat Lookup index is L = 1, the paper's cluster
+                      index is L = 2, super-clusters/shard routers above
+* ``cluster_index`` — the historical two-level cluster index (query
+                      speedup S_C) as a thin L = 2 facade over
+                      ``hier_index``; cost-ordered plans for k >= 1 terms
+* ``batched_query`` — batched hierarchical engine: vectorized per-level
+                      descent planning + length-bucketed kernel execution
+                      for whole query batches (bit-exact vs the
+                      per-query loop at every depth)
 * ``reorder``       — cluster-contiguous renumbering (query speedup S_R)
 * ``seclud``        — SecludPipeline: fit + query + speedup report
 * ``jax_ops``       — jit'd device versions of the hot ops (tables,
@@ -31,6 +36,7 @@ from repro.core.objective import (
     delta_remove_tables,
     assignment_scores,
     query_set_cost,
+    hier_query_set_cost,
 )
 from repro.core.kmeans import kmeans, KMeansResult
 from repro.core.multilevel import multilevel_cluster
@@ -43,6 +49,7 @@ from repro.core.batched_query import (
     plan_segment_pairs,
 )
 from repro.core.cluster_index import ClusterIndex, build_cluster_index, cost_order
+from repro.core.hier_index import HierIndex, HierLevel, as_hier, build_hier_index
 from repro.core.queries import QUERY_PAD, ConjunctiveQueries, as_queries
 from repro.core.reorder import reorder_permutation
 from repro.core.seclud import SecludPipeline, SecludResult
@@ -56,6 +63,7 @@ __all__ = [
     "delta_remove_tables",
     "assignment_scores",
     "query_set_cost",
+    "hier_query_set_cost",
     "kmeans",
     "KMeansResult",
     "multilevel_cluster",
@@ -63,6 +71,10 @@ __all__ = [
     "ClusterIndex",
     "build_cluster_index",
     "cost_order",
+    "HierIndex",
+    "HierLevel",
+    "as_hier",
+    "build_hier_index",
     "QUERY_PAD",
     "ConjunctiveQueries",
     "as_queries",

@@ -16,11 +16,16 @@ three layers:
   list) — the batched mirror of ``ClusterIndex.query``'s smallest-first
   plan.
 
-* planning — ``plan_segment_pairs`` chains the cluster lists of all query
-  terms for the whole batch (CSR set-intersection, no Python per-query
-  loop), yielding every (query, common-cluster) *segment group* — the
-  k posting segments of that cluster, cost-ordered — plus the level-1
-  work accounting of ``ClusterIndex.query``.
+* planning — ``plan_segment_pairs`` descends an arbitrary-depth
+  :class:`repro.core.hier_index.HierIndex` for the whole batch: at every
+  cluster level the surviving node lists of all query terms are chained
+  smallest-first (CSR set-intersection, no Python per-query loop), the
+  common nodes resolve each term's next-level slices, and the leaf level
+  yields every (query, common-leaf-cluster) *segment group* — the k
+  posting segments of that cluster, cost-ordered — plus the per-level
+  work accounting of ``HierIndex.query``.  The historical two-level
+  ``ClusterIndex`` is the L = 2 case (``as_hier`` view, no copies); the
+  flat L = 1 index plans one whole-universe group per query.
 
 * execution — either the host path ``batched_query`` (exact doc ids +
   the work dict of ``ClusterIndex.query``, summed), or the device path
@@ -47,6 +52,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro.core.hier_index import _concat_ranges, as_hier
 from repro.core.queries import ConjunctiveQueries, as_queries
 from repro.index.batched import pow2_buckets
 from repro.kernels.intersect.ref import PAD
@@ -86,6 +92,13 @@ def _csr_starts(lengths: np.ndarray) -> np.ndarray:
     out = np.zeros(len(lengths) + 1, dtype=np.int64)
     np.cumsum(lengths, out=out[1:])
     return out
+
+
+def _ragged_range_idx(starts: np.ndarray, lengths: np.ndarray) -> np.ndarray:
+    """Flat gather indices ``concat(arange(starts[i], starts[i] + lengths[i]))``
+    — the (starts, lengths) spelling of ``hier_index._concat_ranges``,
+    which owns the single implementation."""
+    return _concat_ranges(starts, starts + lengths)
 
 
 def gather_padded(
@@ -244,27 +257,32 @@ def _cost_ordered_terms(cq: ConjunctiveQueries, slot_lens: np.ndarray) -> np.nda
 
 @dataclasses.dataclass
 class SegmentPlan:
-    """Every (query, common-cluster) segment group of a batch, ordered by
-    (query, cluster) — the order ``ClusterIndex.query`` emits.
+    """Every (query, common-leaf-cluster) segment group of a batch,
+    ordered by (query, cluster) — the order ``HierIndex.query`` emits.
 
     A group holds one posting segment per query term (``arity`` of them),
     stored flat in ``seg_start``/``seg_len`` (absolute slices into
-    ``cluster_index.index.post_docs``), *cost-ordered*: within a group,
-    ``seg_ptr[g] + r`` is the r-th shortest segment (ties keep original
-    term order) — the chain order of the per-cluster intersection.
+    ``index.post_docs``), *cost-ordered*: within a group, ``seg_ptr[g] +
+    r`` is the r-th shortest segment (ties keep original term order) —
+    the chain order of the per-cluster intersection.  ``level_work``
+    holds one per-query work array per cluster level of the descent
+    (empty for the flat L = 1 index); ``cluster_work`` is their
+    element-wise sum — at L = 2, exactly the historical level-1 lookup
+    work.
     """
 
     pair_query: np.ndarray  # (G,) int64 — query id of each segment group
-    cluster: np.ndarray  # (G,) int64 — common cluster id
-    base: np.ndarray  # (G,) int64 — ranges[cluster]
-    width: np.ndarray  # (G,) int64 — cluster width (level-2 universe)
+    cluster: np.ndarray  # (G,) int64 — common leaf cluster id
+    base: np.ndarray  # (G,) int64 — leaf_ranges[cluster]
+    width: np.ndarray  # (G,) int64 — cluster width (leaf-level universe)
     arity: np.ndarray  # (G,) int64 — segments per group (= query arity)
     seg_ptr: np.ndarray  # (G + 1,) int64 — group offsets into seg_*
     seg_start: np.ndarray  # (S,) int64 — rank-ordered within each group
     seg_len: np.ndarray  # (S,) int64
-    cluster_work: np.ndarray  # (n_queries,) int64 — level-1 lookup work
+    cluster_work: np.ndarray  # (n_queries,) int64 — summed descent work
     n_queries: int
     max_arity: int
+    level_work: Tuple[np.ndarray, ...] = ()  # per cluster level, (n_queries,)
 
     @property
     def n_pairs(self) -> int:
@@ -291,79 +309,42 @@ class SegmentPlan:
         return np.where(self.arity >= 2, self.seg_len[i], 0)
 
 
-def plan_segment_pairs(cidx, queries) -> SegmentPlan:
-    """Vectorized level 1 of the two-level query for a whole batch.
+def _empty_plan(n_levels: int) -> SegmentPlan:
+    empty = np.zeros(0, np.int64)
+    return SegmentPlan(
+        pair_query=empty,
+        cluster=empty,
+        base=empty,
+        width=empty,
+        arity=empty,
+        seg_ptr=np.zeros(1, np.int64),
+        seg_start=empty,
+        seg_len=empty,
+        cluster_work=np.zeros(0, np.int64),
+        n_queries=0,
+        max_arity=0,
+        level_work=tuple(np.zeros(0, np.int64) for _ in range(n_levels)),
+    )
 
-    Chains each query's cluster lists smallest-first via keyed
-    ``searchsorted`` — no Python per-query loop — with the same
-    running-intersection probing (and work accounting) as
-    ``ClusterIndex.query``, then resolves every common cluster to one
-    posting segment per term, cost-ordered for the level-2 chain.
-    """
-    cq = as_queries(queries)
+
+def _plan_flat_root(hidx, cq: ConjunctiveQueries) -> SegmentPlan:
+    """The L = 1 plan: every query owns one whole-universe group whose
+    segments are its full posting lists — the leaf chain then IS the
+    cost-ordered single-index Lookup of ``chain_lookup``."""
     n = cq.n_queries
     ar = cq.arities
     max_a = cq.max_arity
-    cl64 = cidx.cl_ids.astype(np.int64)
-    t_flat = cq.q_terms
-    clen = (cidx.cl_ptr[t_flat + 1] - cidx.cl_ptr[t_flat]).astype(np.int64)
-    ord_terms = _cost_ordered_terms(cq, clen)
-
-    # Level 1: cost-ordered chain over the cluster lists (universe k).
-    t0 = ord_terms[cq.q_ptr[:-1]]
-    cur_lens = (cidx.cl_ptr[t0 + 1] - cidx.cl_ptr[t0]).astype(np.int64)
-    cur_vals = _ragged_gather(cl64, cidx.cl_ptr[t0], cur_lens)
-    cluster_work = np.zeros(n, np.int64)
-    for s in range(1, max_a):
-        act = np.flatnonzero(ar > s)
-        if len(act) == 0:
-            break
-        ts = ord_terms[cq.q_ptr[:-1][act] + s]
-        l_lens = (cidx.cl_ptr[ts + 1] - cidx.cl_ptr[ts]).astype(np.int64)
-        l_vals = _ragged_gather(cl64, cidx.cl_ptr[ts], l_lens)
-        cur_vals, cur_lens, probes, scanned = _chain_stage(
-            cur_vals,
-            cur_lens,
-            act,
-            l_vals,
-            l_lens,
-            np.full(len(act), cidx.k, np.int64),
-            cidx.bucket_size_clusters,
-        )
-        cluster_work[act] += probes + scanned
-
-    # Groups: one per surviving (query, common cluster).
-    group_query = np.repeat(np.arange(n, dtype=np.int64), cur_lens)
-    cluster = cur_vals.astype(np.int64)
-    g_arity = ar[group_query] if len(group_query) else np.zeros(0, np.int64)
-
-    # Resolve each group to one posting segment per ORIGINAL term slot:
-    # the common cluster is present in every term's cluster list, so a
-    # keyed searchsorted per slot finds its CSR position exactly.
-    key_base = cidx.k + 1
+    ptr = hidx.index.post_ptr
     parts_g, parts_pos, parts_st, parts_ln = [], [], [], []
     for r in range(max_a):
         qa = np.flatnonzero(ar > r)
         if len(qa) == 0:
             break
-        gm = np.flatnonzero(g_arity > r)
-        tr = t_flat[cq.q_ptr[:-1][qa] + r]
-        l_lens = (cidx.cl_ptr[tr + 1] - cidx.cl_ptr[tr]).astype(np.int64)
-        l_ptr = _csr_starts(l_lens)
-        keyed_long = (
-            np.repeat(np.arange(len(qa), dtype=np.int64), l_lens) * key_base
-            + _ragged_gather(cl64, cidx.cl_ptr[tr], l_lens)
-        )
-        qrank = np.full(n, -1, np.int64)
-        qrank[qa] = np.arange(len(qa))
-        gq = qrank[group_query[gm]]
-        pos = np.searchsorted(keyed_long, gq * key_base + cluster[gm])
-        csr_i = cidx.cl_ptr[tr][gq] + (pos - l_ptr[gq])
-        parts_g.append(gm)
-        parts_pos.append(np.full(len(gm), r, np.int64))
-        parts_st.append(cidx.seg_start[csr_i])
-        parts_ln.append(cidx.seg_end[csr_i] - cidx.seg_start[csr_i])
-
+        t = cq.q_terms[cq.q_ptr[:-1][qa] + r]
+        parts_g.append(qa)
+        parts_pos.append(np.full(len(qa), r, np.int64))
+        parts_st.append(ptr[t])
+        parts_ln.append(ptr[t + 1] - ptr[t])
     if parts_g:
         flat_g = np.concatenate(parts_g)
         flat_pos = np.concatenate(parts_pos)
@@ -371,21 +352,187 @@ def plan_segment_pairs(cidx, queries) -> SegmentPlan:
         flat_ln = np.concatenate(parts_ln)
     else:
         flat_g = flat_pos = flat_st = flat_ln = np.zeros(0, np.int64)
-    # Cost order within each group: length ascending, ties by term order —
-    # exactly `cost_order` in the per-query loop.
     order2 = np.lexsort((flat_pos, flat_ln, flat_g))
+    g_arity = ar.astype(np.int64)
     return SegmentPlan(
-        pair_query=group_query,
-        cluster=cluster,
-        base=cidx.ranges[cluster],
-        width=cidx.ranges[cluster + 1] - cidx.ranges[cluster],
+        pair_query=np.arange(n, dtype=np.int64),
+        cluster=np.zeros(n, np.int64),
+        base=np.zeros(n, np.int64),
+        width=np.full(n, hidx.index.n_docs, np.int64),
         arity=g_arity,
         seg_ptr=_csr_starts(g_arity),
         seg_start=flat_st[order2],
         seg_len=flat_ln[order2],
-        cluster_work=cluster_work,
+        cluster_work=np.zeros(n, np.int64),
         n_queries=n,
         max_arity=max_a,
+        level_work=(),
+    )
+
+
+def plan_segment_pairs(cidx, queries) -> SegmentPlan:
+    """Vectorized descent of the hierarchy for a whole batch.
+
+    At every cluster level, each query's surviving node lists are chained
+    smallest-first via keyed ``searchsorted`` — no Python per-query loop —
+    with the same running-intersection probing (and work accounting) as
+    ``HierIndex.query``; the common nodes of a level resolve, per
+    original term slot, the contiguous child slice of the next level,
+    and the leaf level resolves every common cluster to one posting
+    segment per term, cost-ordered for the final per-cluster chain.
+
+    ``cidx`` may be a :class:`repro.core.hier_index.HierIndex` of any
+    depth or the two-level ``ClusterIndex`` facade (the L = 2 view).
+    """
+    hidx = as_hier(cidx)
+    cq = as_queries(queries)
+    n = cq.n_queries
+    ar = cq.arities
+    max_a = cq.max_arity
+    nlev = len(hidx.levels)
+    if n == 0:
+        return _empty_plan(nlev)
+    if nlev == 0:
+        return _plan_flat_root(hidx, cq)
+
+    # Per-(slot, query) rows over the current level's CSR arrays.  At the
+    # top level every row is a CONTIGUOUS slice of the level arrays, so
+    # ``row_start`` holds global starts and no index scratch is needed
+    # (`gi is None`); after a descent, rows are unions of child slices,
+    # so ``gi`` flattens their global indices and ``row_start`` indexes
+    # into it: row (r, q) is gi[row_start[r, q] :][: row_len[r, q]].
+    lev = hidx.levels[0]
+    row_len = np.zeros((max_a, n), np.int64)
+    row_start = np.zeros((max_a, n), np.int64)
+    for r in range(max_a):
+        qa = np.flatnonzero(ar > r)
+        t = cq.q_terms[cq.q_ptr[:-1][qa] + r]
+        row_len[r, qa] = (lev.cl_ptr[t + 1] - lev.cl_ptr[t]).astype(np.int64)
+        row_start[r, qa] = lev.cl_ptr[t]
+    gi = None
+
+    qarange = np.arange(n, dtype=np.int64)
+    sentinel = np.iinfo(np.int64).max
+    level_work = []
+    for li in range(nlev):
+        lev = hidx.levels[li]
+        # vals_src is addressed by row positions: the level array itself
+        # in contiguous mode, the gathered batch otherwise.
+        vals_src = (
+            lev.cl_ids.astype(np.int64)
+            if gi is None
+            else lev.cl_ids[gi].astype(np.int64)
+        )
+
+        # Cost order of each query's slots by current list length
+        # (stable argsort → ties keep slot order, exactly `cost_order`).
+        lens_m = np.where(
+            np.arange(max_a)[:, None] < ar[None, :], row_len, sentinel
+        )
+        rank_slot = np.argsort(lens_m, axis=0, kind="stable")
+
+        # Chain: the running intersection of every query probes its next
+        # (rank-s) list, bucketized over this level's node universe.
+        s0 = rank_slot[0]
+        cur_lens = row_len[s0, qarange]
+        cur_vals = vals_src[_ragged_range_idx(row_start[s0, qarange], cur_lens)]
+        wk = np.zeros(n, np.int64)
+        for s in range(1, max_a):
+            act = np.flatnonzero(ar > s)
+            if len(act) == 0:
+                break
+            sl = rank_slot[s, act]
+            l_lens = row_len[sl, act]
+            l_vals = vals_src[_ragged_range_idx(row_start[sl, act], l_lens)]
+            cur_vals, cur_lens, probes, scanned = _chain_stage(
+                cur_vals,
+                cur_lens,
+                act,
+                l_vals,
+                l_lens,
+                np.full(len(act), lev.k, np.int64),
+                hidx.bucket_size_clusters,
+            )
+            wk[act] += probes + scanned
+        level_work.append(wk)
+
+        # Groups: one per surviving (query, common node) at this level.
+        group_query = np.repeat(qarange, cur_lens)
+        g_arity = ar[group_query] if len(group_query) else np.zeros(0, np.int64)
+
+        # Resolve each group to one entry per ORIGINAL term slot: the
+        # common node is present in every slot's list, so a keyed
+        # searchsorted per slot finds its row position exactly.
+        key_base = lev.k + 1
+        res_g, res_pos, res_gi = [], [], []
+        for r in range(max_a):
+            qa = np.flatnonzero(ar > r)
+            if len(qa) == 0:
+                break
+            gm = np.flatnonzero(g_arity > r)
+            lens_r = row_len[r, qa]
+            l_ptr = _csr_starts(lens_r)
+            keyed_long = (
+                np.repeat(np.arange(len(qa), dtype=np.int64), lens_r) * key_base
+                + vals_src[_ragged_range_idx(row_start[r, qa], lens_r)]
+            )
+            qrank = np.full(n, -1, np.int64)
+            qrank[qa] = np.arange(len(qa))
+            gq = qrank[group_query[gm]]
+            pos = np.searchsorted(keyed_long, gq * key_base + cur_vals[gm])
+            src_pos = row_start[r, qa][gq] + (pos - l_ptr[gq])
+            res_g.append(gm)
+            res_pos.append(np.full(len(gm), r, np.int64))
+            res_gi.append(src_pos if gi is None else gi[src_pos])
+
+        if li == nlev - 1:
+            break
+
+        # Descend: slot (r, q)'s next-level row is the concatenation of
+        # its child slices over q's common nodes — parents ascend, so the
+        # concatenation stays sorted.
+        new_row_len = np.zeros((max_a, n), np.int64)
+        new_row_start = np.zeros((max_a, n), np.int64)
+        gi_parts = []
+        off = 0
+        for r, (gm, gidx) in enumerate(zip(res_g, res_gi)):
+            child_s = lev.seg_start[gidx]
+            child_ln = lev.seg_end[gidx] - lev.seg_start[gidx]
+            qa = np.flatnonzero(ar > r)
+            lens_q = np.zeros(n, np.int64)
+            np.add.at(lens_q, group_query[gm], child_ln)
+            new_row_len[r] = lens_q
+            new_row_start[r, qa] = off + _csr_starts(lens_q[qa])[:-1]
+            gi_parts.append(_ragged_range_idx(child_s, child_ln))
+            off += int(child_ln.sum())
+        row_len, row_start = new_row_len, new_row_start
+        gi = np.concatenate(gi_parts) if gi_parts else np.empty(0, np.int64)
+
+    # Leaf resolution: flatten per-slot segments, cost-ordered within each
+    # group (length ascending, ties by term order — exactly `cost_order`).
+    if res_g:
+        flat_g = np.concatenate(res_g)
+        flat_pos = np.concatenate(res_pos)
+        flat_gi = np.concatenate(res_gi)
+        flat_st = lev.seg_start[flat_gi]
+        flat_ln = lev.seg_end[flat_gi] - lev.seg_start[flat_gi]
+    else:
+        flat_g = flat_pos = flat_st = flat_ln = np.zeros(0, np.int64)
+    order2 = np.lexsort((flat_pos, flat_ln, flat_g))
+    cluster = cur_vals.astype(np.int64)
+    return SegmentPlan(
+        pair_query=group_query,
+        cluster=cluster,
+        base=lev.ranges[cluster],
+        width=lev.ranges[cluster + 1] - lev.ranges[cluster],
+        arity=g_arity,
+        seg_ptr=_csr_starts(g_arity),
+        seg_start=flat_st[order2],
+        seg_len=flat_ln[order2],
+        cluster_work=sum(level_work, np.zeros(n, np.int64)),
+        n_queries=n,
+        max_arity=max_a,
+        level_work=tuple(level_work),
     )
 
 
@@ -397,11 +544,13 @@ def plan_segment_pairs(cidx, queries) -> SegmentPlan:
 def batched_query(
     cidx, queries
 ) -> Tuple[np.ndarray, np.ndarray, Dict[str, float]]:
-    """The whole two-level conjunctive-query batch on the host, exactly.
+    """The whole hierarchical conjunctive-query batch on the host, exactly.
 
-    Returns ``(ptr, docs, work)``: ``docs[ptr[i] : ptr[i + 1]]`` is
-    bit-identical to ``cidx.query(*terms_i)[0]`` and ``work`` holds the
-    summed per-query work dict of the loop.
+    ``cidx`` is a ``HierIndex`` of any depth or the two-level
+    ``ClusterIndex`` facade.  Returns ``(ptr, docs, work)``:
+    ``docs[ptr[i] : ptr[i + 1]]`` is bit-identical to
+    ``cidx.query(*terms_i)[0]`` and ``work`` holds the summed per-query
+    work dict of the loop (including the per-level ``level_{l}`` keys).
     """
     cq = as_queries(queries)
     plan = plan_segment_pairs(cidx, cq)
@@ -443,12 +592,15 @@ def batched_query(
     ptr = np.zeros(plan.n_queries + 1, np.int64)
     np.cumsum(counts, out=ptr[1:])
     cluster_level = int(plan.cluster_work.sum())
-    work = {
-        "cluster_level": float(cluster_level),
-        "probes": float(probes_tot),
-        "scanned": float(scanned_tot),
-        "total": float(cluster_level + probes_tot + scanned_tot),
-    }
+    work = {f"level_{i}": float(w.sum()) for i, w in enumerate(plan.level_work)}
+    work.update(
+        {
+            "cluster_level": float(cluster_level),
+            "probes": float(probes_tot),
+            "scanned": float(scanned_tot),
+            "total": float(cluster_level + probes_tot + scanned_tot),
+        }
+    )
     return ptr, docs, work
 
 
@@ -544,7 +696,9 @@ def batched_counts(
     ``intersect_count`` (Pallas kernel on TPU, jnp elsewhere);
     intermediate stages run the vectorized membership select
     ``intersect_members_ref`` and compact the survivors for the next
-    stage.  Counts are identical to ``ClusterIndex.query``.
+    stage.  Counts are identical to ``HierIndex.query`` (and to the
+    ``ClusterIndex`` facade at L = 2) at any depth — the plan already
+    encodes the whole descent.
     """
     import jax.numpy as jnp
 

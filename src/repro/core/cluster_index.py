@@ -1,4 +1,5 @@
-"""Two-level cluster index (paper §3.3), arbitrary-arity conjunctions.
+"""Two-level cluster index (paper §3.3) — now a thin L = 2 facade over
+the arbitrary-depth hierarchical core (``repro.core.hier_index``).
 
 A *cluster index* is an inverted index over a corpus of k "documents",
 each the concatenation of one cluster: for every term it lists the
@@ -18,29 +19,26 @@ We build it over the *reordered* index (cluster-contiguous ids), so each
 (term, cluster) posting segment is a contiguous slice — one ``searchsorted``
 per query side, no data duplication.  Construction is O(nnz) via
 run-length encoding of the (term, cluster) pairs.
+
+The query algorithms live in :class:`repro.core.hier_index.HierIndex`;
+this class is exactly its L = 2 instantiation (``as_hier`` shares the
+arrays, copying nothing) and exists so the historical two-level API —
+and every caller pickled to it — keeps working unchanged, bit-for-bit
+(results and work dicts, property-tested in ``tests/test_hier_index.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
+from repro.core.hier_index import HierIndex, HierLevel, build_hier_index
 from repro.index.build import InvertedIndex
-from repro.index.lookup import bucketize, cost_order, lookup_intersect
+from repro.index.lookup import cost_order
 
 __all__ = ["ClusterIndex", "build_cluster_index", "cost_order"]
-
-
-def _flatten_terms(terms: Sequence) -> Tuple[int, ...]:
-    """query(t, u), query(t, u, v), query([t, u, v]) all mean the same."""
-    if len(terms) == 1 and not np.isscalar(terms[0]) and hasattr(terms[0], "__len__"):
-        terms = tuple(terms[0])
-    out = tuple(int(t) for t in terms)
-    if not out:
-        raise ValueError("a conjunctive query needs >= 1 term")
-    return out
 
 
 @dataclasses.dataclass
@@ -68,72 +66,40 @@ class ClusterIndex:
         return self.cl_ids[lo:hi], self.seg_start[lo:hi], self.seg_end[lo:hi]
 
     # ------------------------------------------------------------------
-    # Query algorithms
+    # The L = 2 view (shared arrays, built once)
     # ------------------------------------------------------------------
 
-    def _level2(
-        self,
-        terms: Tuple[int, ...],
-        segs: List[Tuple[np.ndarray, np.ndarray, np.ndarray]],
-        common: np.ndarray,
-    ) -> Tuple[np.ndarray, int, int]:
-        """Per-cluster posting intersection, cost-ordered chain.  Shared
-        by :meth:`query` and :meth:`query_all_clusters` (they differ only
-        in how ``common`` was computed)."""
-        pos = [np.searchsorted(segs[i][0], common) for i in range(len(terms))]
-        docs = self.index.post_docs
-        results = []
-        probes = scanned = 0
-        for j, ci in enumerate(common):
-            base = self.ranges[ci]
-            width = int(self.ranges[ci + 1] - base)
-            slices = [
-                docs[segs[i][1][pos[i][j]] : segs[i][2][pos[i][j]]]
-                for i in range(len(terms))
-            ]
-            order = cost_order([len(s) for s in slices])
-            cur = (slices[order[0]] - base).astype(np.int32)
-            for i in order[1:]:
-                blong = bucketize(
-                    slices[i] - base, max(width, 1), self.bucket_size_postings
-                )
-                cur, w2 = lookup_intersect(cur, blong)
-                probes += w2["probes"]
-                scanned += w2["scanned"]
-            if len(cur):
-                results.append(cur.astype(np.int64) + base)
-        out = (
-            np.concatenate(results).astype(np.int32)
-            if results
-            else np.empty(0, np.int32)
-        )
-        return out, probes, scanned
+    def as_hier(self) -> HierIndex:
+        """This index as the L = 2 :class:`HierIndex` — same arrays, no
+        copies; the single source of the query algorithms."""
+        cached = self.__dict__.get("_hier")
+        if cached is None:
+            cached = HierIndex(
+                levels=(
+                    HierLevel(
+                        cl_ptr=self.cl_ptr,
+                        cl_ids=self.cl_ids,
+                        seg_start=self.seg_start,
+                        seg_end=self.seg_end,
+                        ranges=np.asarray(self.ranges, dtype=np.int64),
+                    ),
+                ),
+                index=self.index,
+                bucket_size_clusters=self.bucket_size_clusters,
+                bucket_size_postings=self.bucket_size_postings,
+            )
+            self.__dict__["_hier"] = cached
+        return cached
+
+    # ------------------------------------------------------------------
+    # Query algorithms (delegating facades)
+    # ------------------------------------------------------------------
 
     def query(self, *terms) -> Tuple[np.ndarray, Dict[str, float]]:
         """Two-level conjunctive query over k >= 1 terms: cost-ordered
         cluster-list intersection, then a cost-ordered per-cluster posting
         chain.  Returns (result doc ids, work dict)."""
-        terms = _flatten_terms(terms)
-        segs = [self.term_segments(t) for t in terms]
-        # Level 1: chain the cluster lists smallest-first (bucket size 8,
-        # universe k); the running intersection is always the probing side.
-        order = cost_order([len(s[0]) for s in segs])
-        common = segs[order[0]][0].astype(np.int32)
-        cluster_level = 0
-        for i in order[1:]:
-            common, w1 = lookup_intersect(
-                common,
-                bucketize(segs[i][0].astype(np.int32), self.k, self.bucket_size_clusters),
-            )
-            cluster_level += w1["total"]
-        out, probes, scanned = self._level2(terms, segs, common)
-        work = {
-            "cluster_level": float(cluster_level),
-            "probes": float(probes),
-            "scanned": float(scanned),
-            "total": float(cluster_level + probes + scanned),
-        }
-        return out, work
+        return self.as_hier().query(*terms)
 
     def query_all_clusters(self, *terms) -> Tuple[np.ndarray, Dict[str, float]]:
         """Two-level query WITHOUT the level-1 Lookup: the cluster lists
@@ -142,22 +108,7 @@ class ClusterIndex:
         is the 'most direct way' of §3.3 — competitive when k is small,
         and the oracle the bucketed level-1 Lookup of :meth:`query` must
         match exactly."""
-        terms = _flatten_terms(terms)
-        segs = [self.term_segments(t) for t in terms]
-        order = cost_order([len(s[0]) for s in segs])
-        common = segs[order[0]][0]
-        merge_work = 0.0
-        for i in order[1:]:
-            merge_work += float(len(common) + len(segs[i][0]))
-            common = np.intersect1d(common, segs[i][0])
-        out, probes, scanned = self._level2(terms, segs, common)
-        work = {
-            "cluster_level": merge_work,
-            "probes": float(probes),
-            "scanned": float(scanned),
-            "total": merge_work + probes + scanned,
-        }
-        return out, work
+        return self.as_hier().query_all_clusters(*terms)
 
     def query_batch(
         self, queries
@@ -185,38 +136,26 @@ def build_cluster_index(
     """O(nnz) construction via RLE over (term, cluster) pairs.
 
     ``reordered_index`` must use cluster-contiguous document ids with
-    cluster i owning [ranges[i], ranges[i+1]).
+    cluster i owning [ranges[i], ranges[i+1)).  Exactly the leaf level of
+    :func:`repro.core.hier_index.build_hier_index` with a single cluster
+    level.
     """
-    m = reordered_index.n_terms
-    k = len(ranges) - 1
-    docs = reordered_index.post_docs.astype(np.int64)
-    # Cluster of each posting (ids are cluster-contiguous).
-    cl = np.searchsorted(ranges, docs, side="right") - 1
-    term = np.repeat(
-        np.arange(m, dtype=np.int64), np.diff(reordered_index.post_ptr)
+    hier = build_hier_index(
+        reordered_index,
+        [np.asarray(ranges, dtype=np.int64)],
+        bucket_size_clusters=bucket_size_clusters,
+        bucket_size_postings=bucket_size_postings,
     )
-    key = term * k + cl
-    # Postings are sorted by (term, doc) and doc order refines cluster
-    # order, so equal keys are contiguous: RLE via flat unique.
-    change = np.empty(len(key), dtype=bool)
-    if len(key):
-        change[0] = True
-        np.not_equal(key[1:], key[:-1], out=change[1:])
-    starts = np.flatnonzero(change)
-    ukey = key[starts]
-    ends = np.append(starts[1:], len(key))
-    cl_ids = (ukey % k).astype(np.int32)
-    uterm = ukey // k
-    cl_ptr = np.zeros(m + 1, dtype=np.int64)
-    np.add.at(cl_ptr, uterm + 1, 1)
-    np.cumsum(cl_ptr, out=cl_ptr)
-    return ClusterIndex(
-        cl_ptr=cl_ptr,
-        cl_ids=cl_ids,
-        seg_start=starts.astype(np.int64),
-        seg_end=ends.astype(np.int64),
-        ranges=np.asarray(ranges, dtype=np.int64),
+    leaf = hier.levels[0]
+    cidx = ClusterIndex(
+        cl_ptr=leaf.cl_ptr,
+        cl_ids=leaf.cl_ids,
+        seg_start=leaf.seg_start,
+        seg_end=leaf.seg_end,
+        ranges=leaf.ranges,
         index=reordered_index,
         bucket_size_clusters=bucket_size_clusters,
         bucket_size_postings=bucket_size_postings,
     )
+    cidx.__dict__["_hier"] = hier
+    return cidx

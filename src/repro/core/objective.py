@@ -49,6 +49,7 @@ __all__ = [
     "delta_remove_tables",
     "assignment_scores",
     "query_set_cost",
+    "hier_query_set_cost",
 ]
 
 
@@ -209,6 +210,53 @@ def assignment_scores(view: FrequentTermView, tables: np.ndarray) -> np.ndarray:
     return np.asarray(view.mat @ tables.T)
 
 
+def _queried_term_edges(
+    corpus: Corpus, terms: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(term rank, doc id) of every corpus edge touching a queried term —
+    the O(nnz) selection scan, hoisted so multi-level pricing pays it
+    once (FULL term counts, not the TC-restricted view — queries hit
+    rare terms too)."""
+    sel = np.isin(corpus.doc_terms, terms)
+    e_rank = np.searchsorted(terms, corpus.doc_terms[sel]).astype(np.int64)
+    e_doc = np.repeat(
+        np.arange(corpus.n_docs, dtype=np.int64), np.diff(corpus.doc_ptr)
+    )[sel]
+    return e_rank, e_doc
+
+
+def _counts_from_edges(
+    e_rank: np.ndarray,
+    e_doc: np.ndarray,
+    assign: np.ndarray,
+    k: int,
+    n_sel_terms: int,
+) -> np.ndarray:
+    """(n_sel_terms, k) per-cluster counts from pre-selected edges."""
+    return np.bincount(
+        e_rank * k + assign[e_doc], minlength=n_sel_terms * k
+    ).reshape(n_sel_terms, k)
+
+
+def _chain_cost(c: np.ndarray, q_ptr: np.ndarray, arities: np.ndarray, model: str) -> float:
+    """Σ_q Σ_i Σ_{s ≠ argmin} Φ(min_j c[j, i], c[s, i]) for per-slot cost
+    rows ``c`` ((nnz, k); pass (nnz, 1) for a scalar-per-term model).
+
+    The smallest list is the running probe side of the cost-ordered plan
+    and Φ prices each of the a−1 pairwise reductions: the min slot's
+    Φ(x, x) cancels, leaving one Φ per actual chain stage.  Single-term
+    queries cost 0 (no intersection happens).
+    """
+    from repro.index.intersect import pair_cost
+
+    n_q = len(q_ptr) - 1
+    if n_q == 0:
+        return 0.0
+    x = np.minimum.reduceat(c, q_ptr[:-1], axis=0)  # (nq, k)
+    qid = np.repeat(np.arange(n_q), arities)
+    return float(pair_cost(x[qid], c, model).sum() - pair_cost(x, x, model).sum())
+
+
 def query_set_cost(
     corpus: Corpus,
     assign: Optional[np.ndarray],
@@ -222,16 +270,16 @@ def query_set_cost(
     cost in cluster i is modeled as Σ_{s ≠ argmin} Φ(min_j c_j, c_s): the
     smallest list is the running probe side of the cost-ordered plan and
     Φ prices each of the a−1 pairwise reductions.  For 2-term queries
-    this is exactly the paper's Σ_q Σ_i Φ(n_i(t_q), n_i(u_q)); single-term
-    queries cost 0 (no intersection happens).
+    this is exactly the paper's Σ_q Σ_i Φ(n_i(t_q), n_i(u_q)) (Eq. 2 on
+    the query set); single-term queries cost 0 (no intersection happens).
 
     ``assign=None`` means the unclustered baseline (k = 1).  Used for the
-    theoretical speedup S_T on held-out query logs — note this uses FULL
-    term counts, not the TC-restricted view (queries hit rare terms too).
-    ``queries`` is any form ``repro.core.queries.as_queries`` accepts.
+    theoretical speedup S_T on held-out query logs.  ``queries`` is any
+    form ``repro.core.queries.as_queries`` accepts.  This prices the
+    *posting* level only — :func:`hier_query_set_cost` prices the full
+    descent of a multi-level index.
     """
     from repro.core.queries import as_queries
-    from repro.index.intersect import pair_cost
 
     cq = as_queries(queries)
     terms = np.unique(cq.q_terms)
@@ -240,23 +288,69 @@ def query_set_cost(
     if assign is None:
         assign = np.zeros(corpus.n_docs, dtype=np.int64)
         k = 1
-    # counts over only the queried terms: (len(terms), k)
-    sel = np.isin(corpus.doc_terms, terms)
-    e_term = corpus.doc_terms[sel]
-    e_doc = np.repeat(
-        np.arange(corpus.n_docs, dtype=np.int64), np.diff(corpus.doc_ptr)
-    )[sel]
-    e_rank = np.searchsorted(terms, e_term)
-    cnt = np.bincount(
-        e_rank.astype(np.int64) * k + assign[e_doc], minlength=len(terms) * k
-    ).reshape(len(terms), k)
-
+    e_rank, e_doc = _queried_term_edges(corpus, terms)
+    cnt = _counts_from_edges(e_rank, e_doc, assign, k, len(terms))
     if cq.n_queries == 0:
         return 0.0
-    c = cnt[rows]  # (nnz, k) per-slot per-cluster counts
-    # x: per-query per-cluster minimum — the probing side of the chain.
-    x = np.minimum.reduceat(c, cq.q_ptr[:-1], axis=0)  # (nq, k)
-    qid = np.repeat(np.arange(cq.n_queries), cq.arities)
-    # Σ_slots Φ(x, c_s) − Φ(x, x): the min slot contributes Φ(x, x) which
-    # cancels, leaving one Φ per actual chain stage.
-    return float(pair_cost(x[qid], c, model).sum() - pair_cost(x, x, model).sum())
+    return _chain_cost(cnt[rows], cq.q_ptr, cq.arities, model)
+
+
+def hier_query_set_cost(
+    corpus: Corpus,
+    level_assigns,
+    level_ks,
+    queries,
+    model: str = "lookup",
+) -> dict:
+    """Theoretical cost of the FULL L-level descent for a query set.
+
+    ``level_assigns``/``level_ks`` run coarse -> fine over the cluster
+    levels (empty for the flat L = 1 index): each level-l chain over the
+    terms' node lists is priced with the per-term node-presence counts
+    c_l(t) = #{level-l nodes containing t} — the lists the descent
+    actually intersects — and the leaf posting chain is priced per
+    cluster exactly as :func:`query_set_cost`.
+
+    Returns ``{"level_0": ..., ..., "postings": ..., "total": ...}``.
+    Eq. 2 is recovered at L = 2: the ``postings`` component equals
+    ``query_set_cost(corpus, leaf_assign, leaf_k, queries)`` exactly (and
+    at L = 1 the whole dict degenerates to the unclustered baseline).
+    """
+    from repro.core.queries import as_queries
+
+    cq = as_queries(queries)
+    level_assigns = list(level_assigns)
+    level_ks = [int(x) for x in level_ks]
+    if len(level_assigns) != len(level_ks):
+        raise ValueError("level_assigns and level_ks must align")
+    out = {f"level_{li}": 0.0 for li in range(len(level_assigns))}
+    if cq.n_queries == 0:
+        out["postings"] = 0.0
+        out["total"] = 0.0
+        return out
+    terms = np.unique(cq.q_terms)
+    rows = np.searchsorted(terms, cq.q_terms)
+    # One O(nnz) corpus scan for the whole descent: only the assignment
+    # (a bincount) changes between levels.
+    e_rank, e_doc = _queried_term_edges(corpus, terms)
+    leaf_assign = (
+        level_assigns[-1]
+        if level_assigns
+        else np.zeros(corpus.n_docs, dtype=np.int64)
+    )
+    leaf_k = level_ks[-1] if level_ks else 1
+    cnt_leaf = _counts_from_edges(e_rank, e_doc, leaf_assign, leaf_k, len(terms))
+    leaf = _chain_cost(cnt_leaf[rows], cq.q_ptr, cq.arities, model)
+    out["postings"] = leaf
+    total = leaf
+    for li, (assign, kl) in enumerate(zip(level_assigns, level_ks)):
+        if li == len(level_assigns) - 1:
+            cnt = cnt_leaf  # the leaf counts were just computed
+        else:
+            cnt = _counts_from_edges(e_rank, e_doc, assign, kl, len(terms))
+        presence = (cnt > 0).sum(axis=1).astype(np.float64)  # node-list lengths
+        cost_l = _chain_cost(presence[rows][:, None], cq.q_ptr, cq.arities, model)
+        out[f"level_{li}"] = cost_l
+        total += cost_l
+    out["total"] = total
+    return out

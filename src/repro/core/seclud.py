@@ -1,7 +1,9 @@
 """SecludPipeline — the end-to-end public API of the paper's system.
 
 fit():   estimate P → frequent-term view → cluster (flat-multilevel "FM"
-         or TopDown "TD") → reorder → build the cluster index.
+         or TopDown "TD") → recursively cluster the clusters for
+         ``levels`` > 2 → nested reorder → build the cluster index and
+         the L-level :class:`repro.core.hier_index.HierIndex`.
 evaluate(): the paper's three speedups against the unclustered baseline
          (which, per [14], uses a *random* document permutation):
 
@@ -9,26 +11,32 @@ evaluate(): the paper's three speedups against the unclustered baseline
           actual query set;
   * S_C — measured work of the two-level cluster-index query;
   * S_R — measured work of the single-index Lookup query on the
-          cluster-contiguously *reordered* index.
+          cluster-contiguously *reordered* index;
+  * S_H — measured work of the L-level hierarchical descent (reported
+          when ``fit(levels=L)`` built a depth other than 2, where it
+          would equal S_C).
 
 Every query algorithm returns the exact same result set (losslessness is
-asserted, modulo the id permutation) — the paper's defining property.
+asserted, modulo the id permutation) — the paper's defining property, at
+every depth.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import TYPE_CHECKING, Dict, Optional
+from typing import TYPE_CHECKING, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.cluster_index import ClusterIndex, build_cluster_index
+from repro.core.hier_index import HierIndex, build_hier_index
 from repro.core.multilevel import multilevel_cluster
 from repro.core.objective import (
     FrequentTermView,
     cluster_counts,
     frequent_term_view,
+    hier_query_set_cost,
     psi_from_counts,
     query_set_cost,
 )
@@ -59,11 +67,62 @@ class SecludResult:
     base_perm: np.ndarray
     reordered_index: InvertedIndex
     cluster_index: ClusterIndex
+    # -- hierarchy (levels = 2 unless fit(levels=L) said otherwise) ------
+    levels: int = 2
+    level_ranges: Tuple[np.ndarray, ...] = ()  # coarse -> fine, L-1 arrays
+    level_assigns: Tuple[np.ndarray, ...] = ()  # doc -> node id per level
+    psi_levels: Tuple[float, ...] = ()  # ψ priced at each cluster level
+    hier_index: Optional[HierIndex] = None
 
     @property
     def s_t(self) -> float:
         """Theoretical speedup from ψ itself (frequent terms, Eq. 2)."""
         return self.psi_single / max(self.psi, 1e-30)
+
+
+def _corpus_of_clusters(corpus: Corpus, assign: np.ndarray, k: int) -> Corpus:
+    """The corpus whose "documents" are clusters: cluster j's term set is
+    the union of its members' terms — presence, not counts, because the
+    upper-level node lists the descent intersects are presence lists."""
+    e_doc = np.repeat(
+        np.arange(corpus.n_docs, dtype=np.int64), np.diff(corpus.doc_ptr)
+    )
+    key = assign[e_doc].astype(np.int64) * corpus.n_terms + corpus.doc_terms
+    u = np.unique(key)
+    cl = u // corpus.n_terms
+    terms = (u % corpus.n_terms).astype(np.int32)
+    ptr = np.zeros(k + 1, dtype=np.int64)
+    np.add.at(ptr, cl + 1, 1)
+    np.cumsum(ptr, out=ptr)
+    return Corpus(doc_ptr=ptr, doc_terms=terms, n_terms=corpus.n_terms)
+
+
+def _nest_level_assigns(raw_assigns):
+    """Renumber raw per-level doc assignments (coarse -> fine) so node
+    ids are nested and contiguous: sort documents by the level tuple, cut
+    each level where its (coarser..self) prefix changes.  Empty nodes
+    vanish; the finest renumbered assignment alone sorts documents into
+    the hierarchy order (ties keep original doc order, so
+    ``reorder_permutation`` of it IS the nested permutation)."""
+    n = len(raw_assigns[-1])
+    order = np.lexsort(tuple(reversed(raw_assigns)))
+    level_assigns, level_ranges = [], []
+    change = np.zeros(n, dtype=bool)
+    if n:
+        change[0] = True
+    for raw in raw_assigns:
+        col = raw[order]
+        change = change.copy()
+        if n > 1:
+            change[1:] |= col[1:] != col[:-1]
+        ids_sorted = np.cumsum(change) - 1
+        new_a = np.empty(n, dtype=np.int64)
+        new_a[order] = ids_sorted
+        level_assigns.append(new_a)
+        level_ranges.append(
+            np.append(np.flatnonzero(change), n).astype(np.int64)
+        )
+    return level_assigns, level_ranges
 
 
 class SecludPipeline:
@@ -96,7 +155,25 @@ class SecludPipeline:
         algo: str = "topdown",
         log: Optional[QueryLog] = None,
         p: Optional[np.ndarray] = None,
+        levels: int = 2,
+        level_ks: Optional[Sequence[int]] = None,
     ) -> SecludResult:
+        """Cluster, reorder and index the corpus at depth ``levels``.
+
+        ``levels = 2`` (default) is the paper's pipeline, bit-for-bit.
+        ``levels = 1`` skips clustering entirely — the flat single-index
+        Lookup baseline as a degenerate hierarchy.  ``levels >= 3``
+        recursively clusters the clusters: the leaf clustering runs as
+        usual, then each upper level clusters a corpus whose "documents"
+        are the level below's clusters (term-presence sets), targeting
+        ``level_ks`` (coarse -> fine, ``levels - 2`` values; default: the
+        geometric ladder round(k^((i+1)/(L-1)))).  Document ids are
+        renumbered so every level's nodes own nested contiguous ranges,
+        and the result carries the L-level ``hier_index`` next to the
+        historical two-level ``cluster_index`` (both exact).
+        """
+        if levels < 1:
+            raise ValueError(f"levels must be >= 1, got {levels}")
         if p is None:
             from repro.data.query_log import term_probabilities
 
@@ -104,7 +181,9 @@ class SecludPipeline:
         view = frequent_term_view(corpus, p, tc=self.tc)
 
         t0 = time.perf_counter()
-        if algo in ("flat", "fm"):
+        if levels == 1:
+            assign, k_actual = np.zeros(corpus.n_docs, dtype=np.int64), 1
+        elif algo in ("flat", "fm"):
             res = multilevel_cluster(
                 view,
                 k,
@@ -127,7 +206,22 @@ class SecludPipeline:
             assign, k_actual = res.assign, res.k_actual
         else:
             raise ValueError(f"unknown algo {algo!r}")
+
+        if levels <= 2:
+            level_assigns = [assign] if levels == 2 else []
+        else:
+            level_assigns = self._cluster_the_clusters(
+                corpus, p, assign, k_actual, levels, level_ks
+            )
         cluster_time = time.perf_counter() - t0
+
+        if levels >= 3:
+            # Renumber node ids per level so children of every node are
+            # contiguous (nested ranges); the leaf renumbering replaces
+            # `assign` and sorting by it alone reorders the documents.
+            level_assigns, level_ranges = _nest_level_assigns(level_assigns)
+            assign = level_assigns[-1]
+            k_actual = len(level_ranges[-1]) - 1
 
         counts = cluster_counts(view, assign, k_actual)
         psi = psi_from_counts(counts, view.p_freq)
@@ -142,12 +236,26 @@ class SecludPipeline:
 
         perm = reorder_permutation(assign, k_actual)
         ranges = cluster_ranges(assign, k_actual)
+        if levels <= 2:
+            level_ranges = [ranges] if levels == 2 else []
         reordered = permute_docs(index, perm)
         cidx = build_cluster_index(
             reordered,
             ranges,
             bucket_size_clusters=self.bucket_size_clusters,
             bucket_size_postings=self.bucket_size,
+        )
+        hier = build_hier_index(
+            reordered,
+            level_ranges,
+            bucket_size_clusters=self.bucket_size_clusters,
+            bucket_size_postings=self.bucket_size,
+        )
+        psi_levels = tuple(
+            psi_from_counts(
+                cluster_counts(view, a, len(r) - 1), view.p_freq
+            )
+            for a, r in zip(level_assigns, level_ranges)
         )
         return SecludResult(
             assign=assign,
@@ -162,7 +270,54 @@ class SecludPipeline:
             base_perm=base_perm,
             reordered_index=reordered,
             cluster_index=cidx,
+            levels=levels,
+            level_ranges=tuple(level_ranges),
+            level_assigns=tuple(level_assigns),
+            psi_levels=psi_levels,
+            hier_index=hier,
         )
+
+    def _cluster_the_clusters(
+        self,
+        corpus: Corpus,
+        p: np.ndarray,
+        assign: np.ndarray,
+        k_actual: int,
+        levels: int,
+        level_ks: Optional[Sequence[int]],
+    ):
+        """Raw (un-renumbered) doc-level assignments for every cluster
+        level, coarse -> fine, by recursively clustering the clusters."""
+        if level_ks is not None:
+            upper_ks = [int(x) for x in level_ks]
+            if len(upper_ks) != levels - 2:
+                raise ValueError(
+                    f"level_ks needs {levels - 2} entries (coarse -> fine "
+                    f"above the leaf), got {len(upper_ks)}"
+                )
+        else:
+            upper_ks = [
+                max(2, int(round(k_actual ** ((i + 1) / (levels - 1)))))
+                for i in range(levels - 2)
+            ]
+        level_assigns = [assign]
+        cur, k_cur = assign, k_actual
+        for depth_up, k_up in enumerate(reversed(upper_ks)):
+            k_up = min(k_up, k_cur)
+            cl_corpus = _corpus_of_clusters(corpus, cur, k_cur)
+            view_up = frequent_term_view(cl_corpus, p, tc=self.tc)
+            up = multilevel_cluster(
+                view_up,
+                k_up,
+                eps=self.eps,
+                doc_grained_below=self.doc_grained_below,
+                min_rel_improvement=self.min_rel_improvement,
+                seed=self.seed + 101 * (depth_up + 1),
+            ).assign
+            cur = up[cur]
+            k_cur = k_up
+            level_assigns.insert(0, cur)
+        return level_assigns
 
     # ------------------------------------------------------------------
 
@@ -188,6 +343,11 @@ class SecludPipeline:
         loop: identical work dict (the engine is bit-exact), plus
         wall-clock timings ``t_baseline_s`` / ``t_cluster_index_s`` /
         ``t_reordered_s``.
+
+        When the result was fit at a depth other than 2 the report adds
+        the hierarchical descent: ``S_H`` / ``work_hier`` (measured, also
+        lossless-checked), ``depth``, and the theoretical ``S_T_hier``
+        from :func:`repro.core.objective.hier_query_set_cost`.
         """
         # `max_queries=0` must mean "no queries", not "the full log".
         queries = log.queries[:max_queries] if max_queries is not None else log.queries
@@ -197,6 +357,7 @@ class SecludPipeline:
             )
         cq = as_queries(np.asarray(queries))
         n_docs = corpus.n_docs
+        hier = self._hier_of(result)
 
         def chain(index, terms):
             """Cost-ordered single-index Lookup chain (k=2: the shorter
@@ -207,6 +368,7 @@ class SecludPipeline:
         base_total = 0.0
         sc_total = 0.0
         sr_total = 0.0
+        sh_total = 0.0
         inv_base = np.empty(n_docs, dtype=np.int64)
         inv_base[result.base_perm] = np.arange(n_docs)
         inv_perm = np.empty(n_docs, dtype=np.int64)
@@ -222,6 +384,11 @@ class SecludPipeline:
             # S_R: single-index Lookup on the reordered index.
             r2, w2 = chain(result.reordered_index, terms)
             sr_total += w2
+            # S_H: the L-level descent (only when depth differs from 2).
+            r3 = None
+            if hier is not None:
+                r3, w3 = hier.query(*terms)
+                sh_total += w3["total"]
             if check_lossless:
                 s0 = np.sort(inv_base[r0])
                 s1 = np.sort(inv_perm[r1])
@@ -229,10 +396,52 @@ class SecludPipeline:
                 assert np.array_equal(s0, s1) and np.array_equal(s0, s2), (
                     f"lossless violation on query {tuple(terms)}"
                 )
+                if r3 is not None:
+                    assert np.array_equal(s0, np.sort(inv_perm[r3])), (
+                        f"lossless violation (hier) on query {tuple(terms)}"
+                    )
 
+        extra = self._hier_report(corpus, result, cq, cost_model, base_total, sh_total)
         return self._speedup_report(
-            corpus, result, queries, cost_model, base_total, sc_total, sr_total
+            corpus, result, queries, cost_model, base_total, sc_total, sr_total,
+            **extra,
         )
+
+    @staticmethod
+    def _hier_of(result: SecludResult) -> Optional[HierIndex]:
+        """The hierarchical index to measure separately, or None when it
+        coincides with the two-level cluster index (S_H ≡ S_C)."""
+        hier = getattr(result, "hier_index", None)
+        if hier is None or hier.depth == 2:
+            return None
+        return hier
+
+    def _hier_report(
+        self,
+        corpus: Corpus,
+        result: SecludResult,
+        queries,
+        cost_model: str,
+        base_total: float,
+        sh_total: float,
+    ) -> Dict[str, float]:
+        hier = self._hier_of(result)
+        if hier is None:
+            return {}
+        hc = hier_query_set_cost(
+            corpus,
+            result.level_assigns,
+            [len(r) - 1 for r in result.level_ranges],
+            queries,
+            model=cost_model,
+        )
+        flat = query_set_cost(corpus, None, 1, queries, model=cost_model)
+        return {
+            "S_H": base_total / max(sh_total, 1e-30),
+            "work_hier": sh_total,
+            "depth": float(hier.depth),
+            "S_T_hier": flat / max(hc["total"], 1e-30),
+        }
 
     def _speedup_report(
         self,
@@ -283,6 +492,7 @@ class SecludPipeline:
 
         cq = as_queries(np.asarray(queries))
         n_docs = corpus.n_docs
+        hier = self._hier_of(result)
 
         t0 = time.perf_counter()
         ptr0, docs0, w0 = batched_lookup(
@@ -297,6 +507,15 @@ class SecludPipeline:
             result.reordered_index, cq, bucket_size=self.bucket_size
         )
         t_reordered = time.perf_counter() - t0
+        ptr3 = docs3 = None
+        extra: Dict[str, float] = {}
+        if hier is not None:
+            t0 = time.perf_counter()
+            ptr3, docs3, w3 = batched_query(hier, cq)
+            extra = self._hier_report(
+                corpus, result, cq, cost_model, w0["total"], w3["total"]
+            )
+            extra["t_hier_s"] = time.perf_counter() - t0
 
         if check_lossless:
             inv_base = np.empty(n_docs, dtype=np.int64)
@@ -317,6 +536,10 @@ class SecludPipeline:
             assert np.array_equal(s0, canon(docs1, inv_perm)) and np.array_equal(
                 s0, canon(docs2, inv_perm)
             ), "lossless violation: result sets differ"
+            if ptr3 is not None:
+                assert np.array_equal(ptr0, ptr3) and np.array_equal(
+                    s0, canon(docs3, inv_perm)
+                ), "lossless violation: hierarchical result sets differ"
 
         return self._speedup_report(
             corpus,
@@ -329,4 +552,5 @@ class SecludPipeline:
             t_baseline_s=t_base,
             t_cluster_index_s=t_cluster,
             t_reordered_s=t_reordered,
+            **extra,
         )

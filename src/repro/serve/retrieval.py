@@ -80,7 +80,7 @@ class FilteredRetriever:
     def filter(self, *attrs: int) -> Tuple[np.ndarray, RetrievalReport]:
         """Exact conjunctive filter: item ids having ALL the attributes
         ("in stock AND category=X AND brand=Y" is ``filter(s, x, y)``)."""
-        from repro.core.cluster_index import _flatten_terms
+        from repro.core.hier_index import _flatten_terms
         from repro.index.lookup import chain_lookup
 
         terms = _flatten_terms(attrs)

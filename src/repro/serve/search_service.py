@@ -1,10 +1,14 @@
 """Distributed SeCluD search service.
 
-The paper's two-level query algorithm as a serving system:
+The paper's query algorithm as a serving system, at any hierarchy depth:
 
   * clusters are sharded over the mesh's data axis (the paper §1:
     "the resulting clusters are also useful ... for distributing the work
-    over many machines");
+    over many machines") — with an L-level ``HierIndex`` the TOP level
+    doubles as the machine-level router: ``pack(pin_top=True)`` groups
+    rows by their level-0 ancestor so a top-level cluster's work lands on
+    one contiguous run of rows, i.e. (modulo the shard boundary cut) one
+    mesh shard;
   * the cluster index (term → clusters) is replicated — the paper §3.2
     argues this replication is affordable, we adopt it;
   * a query batch is broadcast, every shard intersects the posting
@@ -14,9 +18,11 @@ Queries are arbitrary-arity conjunctions (``repro.core.queries``): the
 historical ``(n, 2)`` term-pair array, the padded ``(n, max_arity)``
 form, or a ``ConjunctiveQueries``.  Two execution paths with the same
 contract, both on the batched planner (``repro.core.batched_query`` — no
-per-query loop):
+per-query loop), both routed through the fitted ``hier_index`` when the
+result carries one (the plan already encodes the whole descent; the
+two-level ``cluster_index`` is the fallback and the L = 2 case):
   * ``serve_counts``       — host path (vectorized numpy Lookup, exact
-    work metric, bit-identical to looping ``ClusterIndex.query``);
+    work metric, bit-identical to looping ``HierIndex.query``);
   * ``pack`` + ``device_counts`` — device path: fixed-shape padded
     rank-r segment blocks + ``shard_map`` over cluster shards.  All-pair
     batches run the single Pallas/jnp ``intersect_count`` reduction (the
@@ -35,6 +41,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.batched_query import batched_query, gather_padded, plan_segment_pairs
+from repro.core.hier_index import as_hier
 from repro.core.queries import as_queries
 from repro.core.seclud import SecludResult
 from repro.dist import sharding as sh
@@ -45,15 +52,18 @@ __all__ = ["SearchService", "PackedClusters"]
 
 @dataclasses.dataclass
 class PackedClusters:
-    """Device-resident layout: for each (query, cluster-of-query) group
-    the cost-ordered posting segments, padded to fixed per-rank widths and
-    stacked.  ``segments[r]`` is the (R, L_r) rank-r block; rows whose
-    query has fewer than r + 1 terms are all-PAD."""
+    """Device-resident layout: for each (query, leaf-cluster-of-query)
+    group the cost-ordered posting segments, padded to fixed per-rank
+    widths and stacked.  ``segments[r]`` is the (R, L_r) rank-r block;
+    rows whose query has fewer than r + 1 terms are all-PAD.
+    ``row_top`` is each row's top-level (level-0) ancestor cluster — the
+    shard-routing key (equal to the leaf cluster at L = 2, 0 at L = 1)."""
 
     segments: Tuple[np.ndarray, ...]
     row_query: np.ndarray  # (R,) query id of each row
     row_arity: np.ndarray  # (R,) int32 — segments actually present per row
     n_queries: int
+    row_top: Optional[np.ndarray] = None  # (R,) int32 — level-0 ancestor
 
     @property
     def short(self) -> np.ndarray:
@@ -70,39 +80,66 @@ class SearchService:
     def __init__(self, result: SecludResult):
         self.res = result
 
+    @property
+    def query_index(self):
+        """The index queries route through: the fitted L-level
+        ``hier_index`` when the result carries one, else the two-level
+        ``cluster_index`` (stub results in tests, old pickles)."""
+        hier = getattr(self.res, "hier_index", None)
+        return hier if hier is not None else self.res.cluster_index
+
     # -- host path -------------------------------------------------------
 
     def serve_counts(self, queries) -> Tuple[np.ndarray, dict]:
-        """Exact per-query result counts via the two-level cluster index.
+        """Exact per-query result counts via the hierarchical descent.
 
         One vectorized engine pass (``repro.core.batched_query``) — counts
-        and total work are bit-identical to looping ``cluster_index.query``
-        over the conjunctions.
+        and total work are bit-identical to looping
+        ``query_index.query`` over the conjunctions, at any depth.
         """
-        ptr, _docs, work = batched_query(self.res.cluster_index, queries)
+        ptr, _docs, work = batched_query(self.query_index, queries)
         return np.diff(ptr).astype(np.int64), {"work": work["total"]}
 
     # -- device path ------------------------------------------------------
 
-    def pack(self, queries, pad_to: int = 128) -> PackedClusters:
-        """Build the fixed-shape per-(query, cluster) segment batch.
+    def pack(self, queries, pad_to: int = 128, pin_top: bool = False) -> PackedClusters:
+        """Build the fixed-shape per-(query, leaf-cluster) segment batch.
 
-        Rows come from the batched planner (one CSR chain for the whole
+        Rows come from the batched planner (one CSR descent for the whole
         batch, no per-query loop); each query contributes one row per
-        common cluster holding its ``arity`` cost-ordered segments.  An
-        empty plan yields an honestly-empty ``(0, pad_to)`` pack — never a
-        fabricated PAD row attributed to query 0.
+        common leaf cluster holding its ``arity`` cost-ordered segments.
+        An empty plan yields an honestly-empty ``(0, pad_to)`` pack —
+        never a fabricated PAD row attributed to query 0.
+
+        ``pin_top=True`` orders rows by their top-level (level-0)
+        ancestor, so the contiguous row-sharding of ``device_counts``
+        pins each level-0 cluster's work to one mesh shard (up to the
+        single row-count cut per shard boundary).  Counts are unaffected
+        — the per-query segment-sum is order-invariant.
         """
         cq = as_queries(queries)
-        cidx = self.res.cluster_index
-        plan = plan_segment_pairs(cidx, cq)
-        docs = cidx.index.post_docs
+        qidx = self.query_index
+        hidx = as_hier(qidx)
+        plan = plan_segment_pairs(hidx, cq)
+        docs = hidx.index.post_docs
         n_rows = plan.n_pairs
+        if hidx.levels:
+            top_ranges = hidx.levels[0].ranges
+            row_top = (
+                np.searchsorted(top_ranges, plan.base, side="right") - 1
+            ).astype(np.int32)
+        else:
+            row_top = np.zeros(n_rows, np.int32)
+        sel = (
+            np.argsort(row_top, kind="stable")
+            if pin_top
+            else np.arange(n_rows)
+        )
         max_a = max(plan.max_arity, 2)  # always expose short+long blocks
         segments = []
         for r in range(max_a):
-            has = plan.arity > r
-            si = np.where(has, plan.seg_ptr[:-1] + r, 0)  # 0 = safe index
+            has = plan.arity[sel] > r
+            si = np.where(has, plan.seg_ptr[:-1][sel] + r, 0)  # 0 = safe index
             starts = plan.seg_start[si]
             lens = np.where(has, plan.seg_len[si], 0)
             width = max(int(lens.max()) if n_rows else 0, pad_to)
@@ -110,9 +147,10 @@ class SearchService:
             segments.append(gather_padded(docs, starts, lens, width))
         return PackedClusters(
             segments=tuple(segments),
-            row_query=plan.pair_query.astype(np.int32),
-            row_arity=plan.arity.astype(np.int32),
+            row_query=plan.pair_query[sel].astype(np.int32),
+            row_arity=plan.arity[sel].astype(np.int32),
             n_queries=cq.n_queries,
+            row_top=row_top[sel],
         )
 
     @staticmethod

@@ -75,6 +75,29 @@ def test_wallclock_tolerance_is_independent():
     assert len(fails) == 3 and all("regressed" in m for m in fails)
 
 
+def test_new_rows_warn_but_never_fail():
+    """Satellite: rows present in the fresh run but absent from the
+    baseline (a PR adding benchmarks) are tolerated with a warning — no
+    same-PR --update dance — and the wall-clock gate steps aside because
+    the stale baseline total does not include the new rows' time."""
+    grown = dict(BASE)
+    grown["speedups/forum/batched_engine_a7/n1000"] = 11.0
+    doc = _doc(grown, total_seconds=55.0)  # well past the 25% growth gate
+    doc["rows"].append(
+        {"name": "speedups/forum/hier_engine/L3", "us_per_call": 9.0,
+         "derived": "k=16-391;work=181436"}
+    )
+    warnings = []
+    assert compare(_doc(BASE), doc, warnings=warnings) == []
+    assert any("not in the baseline" in w for w in warnings)
+    assert any("wall-clock check skipped" in w for w in warnings)
+    # known rows are still gated at full strength alongside new ones
+    grown_slow = dict(grown)
+    grown_slow["speedups/forum/batched_engine/n1000"] = 20.0 * 0.5
+    fails = compare(_doc(BASE), _doc(grown_slow, total_seconds=55.0))
+    assert len(fails) == 1 and "regressed" in fails[0]
+
+
 def test_gate_trips_on_missing_row_and_errors():
     partial = {k: v for k, v in BASE.items() if "a5" not in k}
     fails = compare(_doc(BASE), _doc(partial))
@@ -123,3 +146,10 @@ def test_repo_baseline_is_committed_and_gateable():
     assert all(v > 1.0 for v in sp.values())  # the engine must actually win
     assert float(doc["total_seconds"]) > 0
     assert not doc.get("errors")
+    # the hierarchical-depth and adaptive-intersect rows are baselined too
+    from benchmarks.compare import row_names
+
+    all_names = row_names(doc)
+    for want in ("/hier_engine/L1", "/hier_engine/L2", "/hier_engine/L3",
+                 "/adaptive_vs_lookup/"):
+        assert any(want in n for n in all_names), (want, sorted(all_names))

@@ -1,0 +1,393 @@
+"""The arbitrary-depth hierarchical index: degeneracy, exactness and
+pipeline contracts.
+
+The contract under test (the PR's acceptance criteria):
+
+* **L = 2 bit-identity** — a ``HierIndex`` with one cluster level
+  reproduces the historical ``ClusterIndex`` facade exactly: results AND
+  work dicts, per query and batched.
+* **L = 1 degeneracy** — zero cluster levels IS the flat single-index
+  cost-ordered Lookup chain (``chain_lookup`` / ``batched_lookup``),
+  bit-for-bit including work.
+* **Exactness at every depth** — L ∈ {1, 2, 3} all return the identical
+  result sets, equal to chained ``np.intersect1d``, on randomized
+  corpora including empty postings, k = 1 clusters, absent terms and
+  duplicate query terms; the batched engine and the device count path
+  agree with the per-query loop at every depth.
+* **TopDown ≡ FM result sets** — a hierarchy grown from TopDown leaf
+  assignments returns the same result sets as the FM-grown one (the
+  clustering only moves work around, never answers).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
+
+from repro.core.batched_query import (
+    batched_counts,
+    batched_lookup,
+    batched_query,
+)
+from repro.core.cluster_index import build_cluster_index
+from repro.core.hier_index import HierIndex, as_hier, build_hier_index
+from repro.core.objective import hier_query_set_cost, query_set_cost
+from repro.core.queries import ConjunctiveQueries
+from repro.core.reorder import cluster_ranges, reorder_permutation
+from repro.core.seclud import SecludPipeline
+from repro.data.corpus import Corpus
+from repro.index.build import build_index, permute_docs
+from repro.index.lookup import chain_lookup
+
+
+# ----------------------------------------------------------------------
+# Randomized nested setups
+# ----------------------------------------------------------------------
+
+
+def _random_corpus(rng, n_docs, n_terms, mean_len=12):
+    doc_lens = rng.integers(1, 2 * mean_len, n_docs)
+    rows, ptr = [], [0]
+    for d in range(n_docs):
+        r = np.unique(rng.integers(0, n_terms, doc_lens[d]))
+        rows.append(r)
+        ptr.append(ptr[-1] + len(r))
+    return Corpus(
+        doc_ptr=np.asarray(ptr, np.int64),
+        doc_terms=np.concatenate(rows).astype(np.int32),
+        n_terms=n_terms,
+    )
+
+
+def _nested_setup(rng, n_docs, n_terms, k, k0):
+    """Random leaf clustering + random parent map, renumbered so parents
+    own contiguous leaf blocks; returns indexes at depths 1, 2, 3 over
+    the SAME reordered id space."""
+    corpus = _random_corpus(rng, n_docs, n_terms)
+    assign = rng.integers(0, k, n_docs)
+    assign[rng.integers(0, n_docs)] = k - 1  # force cluster k-1 nonempty
+    parent = rng.integers(0, k0, k)
+    order = np.argsort(parent, kind="stable")
+    rank = np.empty(k, np.int64)
+    rank[order] = np.arange(k)
+    assign2 = rank[assign]  # leaf ids grouped by parent
+    perm = reorder_permutation(assign2, k)
+    ranges_leaf = cluster_ranges(assign2, k)
+    sizes_leaf = np.diff(ranges_leaf)
+    ranges_top = np.zeros(k0 + 1, np.int64)
+    np.add.at(ranges_top, parent[order] + 1, sizes_leaf)
+    np.cumsum(ranges_top, out=ranges_top)
+    index = build_index(corpus)
+    reordered = permute_docs(index, perm)
+    h1 = build_hier_index(reordered, [])
+    h2 = build_hier_index(reordered, [ranges_leaf])
+    h3 = build_hier_index(reordered, [ranges_top, ranges_leaf])
+    cidx = build_cluster_index(reordered, ranges_leaf)
+    return corpus, index, reordered, perm, cidx, h1, h2, h3
+
+
+def _random_ragged_queries(rng, n_q, n_terms, max_arity=5):
+    lists = []
+    for _ in range(n_q):
+        a = int(rng.integers(1, max_arity + 1))
+        t = rng.integers(0, n_terms, a).tolist()
+        if a >= 2 and rng.random() < 0.25:
+            t[1] = t[0]  # duplicate term: ∩ is idempotent
+        lists.append(t)
+    return ConjunctiveQueries.from_lists(lists)
+
+
+def _brute(index, terms):
+    want = index.postings(int(terms[0]))
+    for t in terms[1:]:
+        want = np.intersect1d(want, index.postings(int(t)))
+    return want
+
+
+# ----------------------------------------------------------------------
+# Degeneracy + exactness at every depth
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_hier_depths_agree_and_match_oracle(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    n_docs = data.draw(st.integers(50, 250))
+    n_terms = data.draw(st.integers(20, 200))
+    k = data.draw(st.integers(1, 12))
+    k0 = data.draw(st.integers(1, max(1, k // 2 + 1)))
+    corpus, index, reordered, perm, cidx, h1, h2, h3 = _nested_setup(
+        rng, n_docs, n_terms, k, k0
+    )
+    inv = np.empty(n_docs, np.int64)
+    inv[perm] = np.arange(n_docs)
+    cq = _random_ragged_queries(rng, data.draw(st.integers(1, 20)), n_terms)
+    for h in (h1, h2, h3):
+        ptr, docs, work = batched_query(h, cq)
+        counts, _ = batched_counts(h, cq)
+        assert np.array_equal(counts, np.diff(ptr))
+        sums = {}
+        for i, terms in enumerate(cq):
+            want = _brute(index, terms)
+            r_loop, w_loop = h.query(*terms)
+            r_merge, w_merge = h.query_all_clusters(*terms)
+            assert np.array_equal(np.sort(inv[r_loop]), want)
+            assert np.array_equal(np.sort(inv[r_merge]), want)
+            assert np.array_equal(docs[ptr[i] : ptr[i + 1]], r_loop)
+            for key, v in w_loop.items():
+                sums[key] = sums.get(key, 0.0) + v
+        # batched work dict == summed loop dicts, per-level keys included
+        for key, v in sums.items():
+            assert work[key] == v, key
+
+
+def test_hier_L2_bit_identical_to_cluster_index(rng):
+    corpus, index, reordered, perm, cidx, h1, h2, h3 = _nested_setup(
+        rng, 220, 120, k=9, k0=3
+    )
+    cq = _random_ragged_queries(rng, 40, 120)
+    for terms in cq:
+        r_f, w_f = cidx.query(*terms)
+        r_h, w_h = h2.query(*terms)
+        assert np.array_equal(r_f, r_h) and w_f == w_h
+        r_fa, w_fa = cidx.query_all_clusters(*terms)
+        r_ha, w_ha = h2.query_all_clusters(*terms)
+        assert np.array_equal(r_fa, r_ha) and w_fa == w_ha
+    ptr_f, docs_f, work_f = cidx.query_batch(cq)
+    ptr_h, docs_h, work_h = batched_query(h2, cq)
+    assert np.array_equal(ptr_f, ptr_h)
+    assert np.array_equal(docs_f, docs_h)
+    assert work_f == work_h
+    # the facade's L = 2 view shares the arrays, no copies
+    assert as_hier(cidx).levels[0].cl_ids is cidx.cl_ids
+
+
+def test_hier_L1_is_the_flat_lookup_chain(rng):
+    corpus, index, reordered, perm, cidx, h1, h2, h3 = _nested_setup(
+        rng, 180, 90, k=7, k0=2
+    )
+    cq = _random_ragged_queries(rng, 40, 90)
+    ptr, docs, work = batched_query(h1, cq)
+    ptr_l, docs_l, work_l = batched_lookup(reordered, cq, bucket_size=16)
+    assert np.array_equal(ptr, ptr_l) and np.array_equal(docs, docs_l)
+    assert work["probes"] == work_l["probes"]
+    assert work["scanned"] == work_l["scanned"]
+    assert work["cluster_level"] == 0.0
+    for terms in cq:
+        r, w = h1.query(*terms)
+        want, chain_work = chain_lookup(
+            [reordered.postings(int(t)) for t in terms], reordered.n_docs, 16
+        )
+        assert np.array_equal(r, want)
+        assert w["total"] == chain_work
+
+
+def test_hier_empty_postings_absent_terms_k1(rng):
+    corpus, index, reordered, perm, cidx, h1, h2, h3 = _nested_setup(
+        rng, 150, 500, k=1, k0=1
+    )
+    df = np.diff(index.post_ptr)
+    empty = np.flatnonzero(df == 0)
+    alive = np.flatnonzero(df > 0)
+    assert len(empty) >= 3
+    inv = np.empty(150, np.int64)
+    inv[perm] = np.arange(150)
+    cq = ConjunctiveQueries.from_lists(
+        [
+            [int(empty[0])],
+            [int(empty[0]), int(empty[1]), int(empty[2])],
+            [int(alive[0]), int(empty[0]), int(alive[1])],
+            [int(alive[0]), int(alive[1]), int(alive[2])],
+            [int(alive[3])],
+        ]
+    )
+    for h in (h1, h2, h3):
+        ptr, docs, _ = batched_query(h, cq)
+        assert ptr[1] == 0 and ptr[2] == 0 and ptr[3] == 0
+        for i, terms in enumerate(cq):
+            r, _ = h.query(*terms)
+            assert np.array_equal(docs[ptr[i] : ptr[i + 1]], r)
+            assert np.array_equal(np.sort(inv[r]), _brute(index, terms))
+
+
+def test_build_hier_index_validates_ranges(rng):
+    corpus = _random_corpus(rng, 60, 30)
+    index = build_index(corpus)
+    with pytest.raises(ValueError, match="boundary array"):
+        build_hier_index(index, [np.array([0, 10])])  # doesn't span [0, n]
+    leaf = np.array([0, 20, 40, 60])
+    with pytest.raises(ValueError, match="not nested"):
+        build_hier_index(index, [np.array([0, 30, 60]), leaf])
+    # nested is fine
+    h = build_hier_index(index, [np.array([0, 40, 60]), leaf])
+    assert h.depth == 3 and h.levels[0].k == 2 and h.k == 3
+
+
+# ----------------------------------------------------------------------
+# Pipeline: fit(levels=L)
+# ----------------------------------------------------------------------
+
+
+def _fit(corpus, log, algo, levels, k=10, seed=0):
+    pipe = SecludPipeline(tc=600, doc_grained_below=128, seed=seed)
+    return pipe, pipe.fit(corpus, k=k, algo=algo, log=log, levels=levels)
+
+
+def test_fit_levels_nested_ranges_and_psi(small_corpus, small_log):
+    pipe, res = _fit(small_corpus, small_log, "topdown", levels=4)
+    assert res.levels == 4 and res.hier_index.depth == 4
+    assert len(res.level_ranges) == 3 == len(res.psi_levels)
+    # nesting: every coarser boundary is a boundary of the next finer level
+    for coarse, fine in zip(res.level_ranges, res.level_ranges[1:]):
+        assert np.isin(coarse, fine).all()
+    assert np.array_equal(res.level_ranges[-1], res.ranges)
+    # coarser levels can only merge lists -> ψ never decreases going up
+    assert res.psi_levels[-1] == res.psi
+    assert all(
+        a >= b - 1e-9 for a, b in zip(res.psi_levels, res.psi_levels[1:])
+    )
+    # leaf assignment is consistent with the nested reorder
+    assert np.array_equal(
+        cluster_ranges(res.assign, res.k), res.level_ranges[-1]
+    )
+    assert np.array_equal(reorder_permutation(res.assign, res.k), res.perm)
+
+
+@pytest.mark.parametrize("levels", [1, 3])
+def test_evaluate_reports_hier_and_stays_lossless(
+    small_corpus, small_log, levels
+):
+    pipe, res = _fit(small_corpus, small_log, "topdown", levels=levels)
+    ev_loop = pipe.evaluate(small_corpus, res, small_log, max_queries=50)
+    ev_bat = pipe.evaluate(
+        small_corpus, res, small_log, max_queries=50, batched=True
+    )
+    assert ev_loop["depth"] == float(levels)
+    for key in ("S_H", "work_hier", "S_T_hier", "S_C", "S_R", "S_T"):
+        assert ev_bat[key] == ev_loop[key], key
+    assert ev_loop["work_hier"] > 0
+    if levels == 1:
+        # flat hier == the reordered single-index Lookup... except L=1
+        # never reorders (one cluster), so it matches the S_R path run
+        # on its identity permutation exactly.
+        assert ev_loop["work_hier"] == ev_loop["work_reordered"]
+
+
+def test_topdown_and_fm_hierarchies_return_identical_results(rng):
+    """Satellite: a HierIndex grown from TopDown leaf assignments answers
+    exactly like the FM-grown one (and like intersect1d), including empty
+    postings, absent terms, duplicate terms and k = 1."""
+    for trial, (n_docs, n_terms, k) in enumerate(
+        [(140, 400, 8), (90, 60, 1), (200, 150, 12)]
+    ):
+        corpus = _random_corpus(np.random.default_rng(100 + trial), n_docs, n_terms)
+        from repro.data.query_log import synth_query_log
+
+        log = synth_query_log(corpus, n_queries=60, seed=trial)
+        index = build_index(corpus)
+        _, res_td = _fit(corpus, log, "topdown", levels=3, k=k, seed=trial)
+        _, res_fm = _fit(corpus, log, "flat", levels=3, k=k, seed=trial)
+        assert res_td.hier_index.depth == res_fm.hier_index.depth == 3
+        inv_td = np.empty(n_docs, np.int64)
+        inv_td[res_td.perm] = np.arange(n_docs)
+        inv_fm = np.empty(n_docs, np.int64)
+        inv_fm[res_fm.perm] = np.arange(n_docs)
+        df = np.diff(index.post_ptr)
+        absent = np.flatnonzero(df == 0)
+        qrng = np.random.default_rng(1000 + trial)
+        cq = _random_ragged_queries(qrng, 30, n_terms)
+        if len(absent):
+            cq = ConjunctiveQueries.from_lists(
+                [list(t) for t in cq]
+                + [[int(absent[0])], [int(absent[0]), int(qrng.integers(n_terms))]]
+            )
+        for terms in cq:
+            want = _brute(index, terms)
+            r_td, _ = res_td.hier_index.query(*terms)
+            r_fm, _ = res_fm.hier_index.query(*terms)
+            assert np.array_equal(np.sort(inv_td[r_td]), want)
+            assert np.array_equal(np.sort(inv_fm[r_fm]), want)
+
+
+# ----------------------------------------------------------------------
+# Descent pricing
+# ----------------------------------------------------------------------
+
+
+def test_hier_query_set_cost_recovers_eq2_at_L2(small_corpus, small_log):
+    pipe, res = _fit(small_corpus, small_log, "topdown", levels=2)
+    queries = small_log.queries[:80]
+    hc = hier_query_set_cost(
+        small_corpus,
+        res.level_assigns,
+        [len(r) - 1 for r in res.level_ranges],
+        queries,
+    )
+    legacy = query_set_cost(small_corpus, res.assign, res.k, queries)
+    assert hc["postings"] == legacy  # Eq. 2 recovered at L = 2
+    assert hc["total"] == hc["postings"] + hc["level_0"]
+    assert hc["level_0"] >= 0
+    # L = 1: no cluster levels, pure unclustered baseline
+    flat = hier_query_set_cost(small_corpus, [], [], queries)
+    assert flat["total"] == flat["postings"] == query_set_cost(
+        small_corpus, None, 1, queries
+    )
+    # empty query set prices to zero
+    zero = hier_query_set_cost(
+        small_corpus, res.level_assigns, [res.k], queries[:0]
+    )
+    assert zero["total"] == 0.0
+
+
+# ----------------------------------------------------------------------
+# Serving at depth
+# ----------------------------------------------------------------------
+
+
+def test_search_service_routes_through_hierarchy(small_corpus, small_log):
+    from repro.serve.search_service import SearchService
+
+    pipe, res = _fit(small_corpus, small_log, "topdown", levels=3)
+    svc = SearchService(res)
+    assert isinstance(svc.query_index, HierIndex)
+    assert svc.query_index.depth == 3
+    queries = small_log.queries[:30]
+    counts, work = svc.serve_counts(queries)
+    # host counts == looping the hierarchical query
+    total = 0.0
+    for qi, terms in enumerate(np.asarray(queries)):
+        r, w = res.hier_index.query(*[int(t) for t in terms])
+        assert counts[qi] == len(r)
+        total += w["total"]
+    assert work["work"] == total
+    # device path, pinned and unpinned, agrees with the host
+    from repro.serve.search_service import SearchService as S
+
+    packed = svc.pack(queries)
+    np.testing.assert_array_equal(np.asarray(S.device_counts(packed)), counts)
+    pinned = svc.pack(queries, pin_top=True)
+    assert pinned.row_top is not None
+    assert np.all(np.diff(pinned.row_top) >= 0)  # grouped by level-0 node
+    assert packed.row_top.min() >= 0
+    assert packed.row_top.max() < res.hier_index.levels[0].k
+    np.testing.assert_array_equal(
+        np.asarray(S.device_counts(pinned)), counts
+    )
+
+
+def test_pack_row_top_equals_cluster_at_L2(small_corpus, small_log):
+    from repro.serve.search_service import SearchService
+
+    pipe, res = _fit(small_corpus, small_log, "topdown", levels=2)
+    svc = SearchService(res)
+    packed = svc.pack(small_log.queries[:20])
+    # at L = 2 the top level IS the leaf level: row_top = leaf cluster,
+    # recoverable from the rank-0 segment's first doc id (leaf segments
+    # are never empty — a cluster is listed only if it holds the term).
+    leaf = (
+        np.searchsorted(
+            res.ranges, packed.segments[0][:, 0].astype(np.int64), side="right"
+        )
+        - 1
+    )
+    np.testing.assert_array_equal(packed.row_top, leaf)
