@@ -9,6 +9,14 @@ engine's 22x win.  This gate fails the benchmark job when
     ``--max-regression`` (default 25%) below the baseline — speedups are
     loop-vs-engine ratios measured on the same machine, so they transfer
     across runner generations;
+  * a ``batched_engine*`` row's DEVICE path regresses: the gated quantity
+    is ``device_s / host_s`` (both measured in the same run, so the ratio
+    transfers across machines like ``host_speedup`` does) — it must not
+    grow more than ``--max-regression`` over the baseline ratio, and a
+    fresh ratio clearly above 1.0 (device losing to host outright; a 2%
+    grace band absorbs timer noise at parity) fails whenever the
+    baseline had it winning.  Baselines whose rows predate the
+    ``device_s``/``host_s`` fields skip this check with a warning;
   * the smoke suite's total wall-clock grows more than
     ``--max-wallclock-regression`` (defaults to ``--max-regression``;
     catches "everything got slower" regressions the ratio hides).
@@ -44,6 +52,12 @@ from typing import Dict, List
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent.parent / "BENCH_baseline.json"
 _SPEEDUP_RE = re.compile(r"host_speedup=([0-9.]+)x")
+_HOST_S_RE = re.compile(r"host_s=([0-9.]+)")
+_DEVICE_S_RE = re.compile(r"device_s=([0-9.]+)")
+# The device path must keep beating the host path; a hair above parity is
+# tolerated so timer noise on a ~0.95 baseline can't flake CI, anything
+# clearly above fails even inside the relative tolerance.
+_CROSS_GRACE = 1.02
 
 
 def load(path: str | Path) -> dict:
@@ -61,6 +75,23 @@ def engine_speedups(doc: dict) -> Dict[str, float]:
         m = _SPEEDUP_RE.search(r.get("derived", ""))
         if m:
             out[name] = float(m.group(1))
+    return out
+
+
+def engine_device_ratios(doc: dict) -> Dict[str, float]:
+    """``batched_engine*`` row name -> device_s / host_s (same-run ratio;
+    < 1.0 means the device path wins).  Rows lacking either field — old
+    baselines — are simply absent."""
+    out: Dict[str, float] = {}
+    for r in doc.get("rows", []):
+        name = r.get("name", "")
+        if "/batched_engine" not in name:
+            continue
+        derived = r.get("derived", "")
+        mh = _HOST_S_RE.search(derived)
+        md = _DEVICE_S_RE.search(derived)
+        if mh and md and float(mh.group(1)) > 0:
+            out[name] = float(md.group(1)) / float(mh.group(1))
     return out
 
 
@@ -97,6 +128,29 @@ def compare(
             fails.append(
                 f"{name}: host_speedup regressed {b:.1f}x -> {f:.1f}x "
                 f"(> {max_regression:.0%} drop)"
+            )
+    # Device path: gate the same-run device_s/host_s ratio so a slow
+    # device engine can't hide behind a healthy host speedup.
+    base_dr = engine_device_ratios(baseline)
+    fresh_dr = engine_device_ratios(fresh)
+    for name, b in sorted(base_dr.items()):
+        f = fresh_dr.get(name)
+        if f is None:
+            if name in fresh_sp:
+                warnings.append(
+                    f"{name}: fresh row has no device_s/host_s fields — "
+                    "device-path gate skipped"
+                )
+            continue  # missing-row failure already reported above
+        if f > b * (1.0 + max_regression):
+            fails.append(
+                f"{name}: device/host ratio regressed {b:.2f} -> {f:.2f} "
+                f"(> {max_regression:.0%} growth)"
+            )
+        elif f > _CROSS_GRACE and b <= 1.0:
+            fails.append(
+                f"{name}: device path lost to the host path "
+                f"(ratio {b:.2f} -> {f:.2f} crossed 1.0)"
             )
     # New rows are progress, not regressions: warn so someone re-baselines,
     # never fail (a PR adding benches must not need a same-PR --update).
@@ -170,13 +224,19 @@ def main(argv: List[str] | None = None) -> int:
     )
     base_sp = engine_speedups(baseline)
     fresh_sp = engine_speedups(fresh)
+    base_dr = engine_device_ratios(baseline)
+    fresh_dr = engine_device_ratios(fresh)
     for name in sorted(set(base_sp) | set(fresh_sp)):
         b = base_sp.get(name)
         f = fresh_sp.get(name)
+        bd = base_dr.get(name)
+        fd = fresh_dr.get(name)
         print(
             f"{name}: baseline "
             f"{'-' if b is None else f'{b:.1f}x'} -> fresh "
-            f"{'-' if f is None else f'{f:.1f}x'}"
+            f"{'-' if f is None else f'{f:.1f}x'}; device/host "
+            f"{'-' if bd is None else f'{bd:.2f}'} -> "
+            f"{'-' if fd is None else f'{fd:.2f}'}"
         )
     print(
         f"wall-clock: baseline {baseline.get('total_seconds', 0)}s -> "

@@ -129,6 +129,7 @@ def _lookup_many(
     long_ptr: np.ndarray,
     universes: np.ndarray,
     bucket_size: int,
+    track_work: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized ``lookup_intersect(short_p, bucketize(long_p, U_p, B))``
     over P pairs at once.
@@ -141,6 +142,13 @@ def _lookup_many(
     ``repro.index.lookup.lookup_intersect``, and ``pos`` is the global index
     into ``long_vals`` of each short element's match candidate (valid where
     ``hit``).
+
+    ``track_work=False`` skips the directory-probe bookkeeping (bucket
+    bounds, resumable-scan pointers) and returns zero ``probes`` /
+    ``scanned``: the ``hit`` mask — hence the surviving intersection — is
+    identical, at roughly a third of the ``searchsorted`` work.  The
+    device engine plans with this (it needs the layout, not the paper's
+    work metric); every host path keeps the exact accounting.
     """
     n_pairs = len(universes)
     short_len = np.diff(short_ptr)
@@ -154,6 +162,25 @@ def _lookup_many(
             np.zeros(n_short, np.int64),
         )
     universes = universes.astype(np.int64)
+    pair_s = np.repeat(np.arange(n_pairs, dtype=np.int64), short_len)
+    x = short_vals.astype(np.int64)
+    if not track_work:
+        # Membership only: one keyed searchsorted; keys are unique
+        # (pair * base + value), so equality at the insertion point IS the
+        # hit test — no bucket directory needed.
+        base = int(universes.max()) + 1
+        keyed_long = (
+            np.repeat(np.arange(n_pairs, dtype=np.int64), long_len) * base
+            + long_vals.astype(np.int64)
+        )
+        key0 = pair_s * base
+        pos = np.searchsorted(keyed_long, key0 + x)
+        if len(keyed_long):
+            hit = keyed_long[np.minimum(pos, len(keyed_long) - 1)] == key0 + x
+        else:
+            hit = np.zeros(n_short, bool)
+        zeros = np.zeros(n_pairs, np.int64)
+        return hit, zeros, zeros.copy(), pos
     # Per-pair bucket shift, exactly `_pick_shift` (only consumed when the
     # long side is non-empty; empty pairs cost nothing below).
     target = np.maximum(
@@ -168,12 +195,10 @@ def _lookup_many(
     # arrays stay globally sorted and probes never cross pair boundaries.
     base = int((n_buckets << shift).max()) + 1
 
-    pair_s = np.repeat(np.arange(n_pairs, dtype=np.int64), short_len)
     keyed_long = (
         np.repeat(np.arange(n_pairs, dtype=np.int64), long_len) * base
         + long_vals.astype(np.int64)
     )
-    x = short_vals.astype(np.int64)
     sh = shift[pair_s]
     b = np.clip(x >> sh, 0, n_buckets[pair_s] - 1)
     key0 = pair_s * base
@@ -209,6 +234,7 @@ def _chain_stage(
     long_lens: np.ndarray,
     universes: np.ndarray,
     bucket_size: int,
+    track_work: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """One stage of a batched cost-ordered intersection chain.
 
@@ -229,6 +255,7 @@ def _chain_stage(
         _csr_starts(long_lens),
         universes,
         bucket_size,
+        track_work=track_work,
     )
     rows, within = _ragged_indices(sub_lens)
     keep = np.ones(len(cur_vals), bool)
@@ -370,7 +397,7 @@ def _plan_flat_root(hidx, cq: ConjunctiveQueries) -> SegmentPlan:
     )
 
 
-def plan_segment_pairs(cidx, queries) -> SegmentPlan:
+def plan_segment_pairs(cidx, queries, track_work: bool = True) -> SegmentPlan:
     """Vectorized descent of the hierarchy for a whole batch.
 
     At every cluster level, each query's surviving node lists are chained
@@ -383,6 +410,11 @@ def plan_segment_pairs(cidx, queries) -> SegmentPlan:
 
     ``cidx`` may be a :class:`repro.core.hier_index.HierIndex` of any
     depth or the two-level ``ClusterIndex`` facade (the L = 2 view).
+
+    ``track_work=False`` plans the identical segment groups without the
+    per-level work accounting (``cluster_work`` / ``level_work`` come
+    back zero) — the device engine's cheaper planning mode; every path
+    that reports the paper's work metric must keep the default.
     """
     hidx = as_hier(cidx)
     cq = as_queries(queries)
@@ -452,6 +484,7 @@ def plan_segment_pairs(cidx, queries) -> SegmentPlan:
                 l_lens,
                 np.full(len(act), lev.k, np.int64),
                 hidx.bucket_size_clusters,
+                track_work=track_work,
             )
             wk[act] += probes + scanned
         level_work.append(wk)
@@ -654,32 +687,8 @@ def batched_lookup(
 
 
 # ----------------------------------------------------------------------
-# Device execution: length-bucketed bins through the intersect kernels
+# Device execution: the upload-once fused fold
 # ----------------------------------------------------------------------
-
-
-def _csr_update(
-    vals: np.ndarray,
-    lens: np.ndarray,
-    rows: np.ndarray,
-    rows_vals: np.ndarray,
-    rows_lens: np.ndarray,
-) -> Tuple[np.ndarray, np.ndarray]:
-    """Replace the CSR slices of ``rows`` (any order) with ``rows_vals``
-    (concatenated in ``rows`` order); every other slice passes through."""
-    new_lens = lens.copy()
-    new_lens[rows] = rows_lens
-    out = np.empty(int(new_lens.sum()), vals.dtype)
-    new_starts = _csr_starts(new_lens)[:-1]
-    old_starts = _csr_starts(lens)[:-1]
-    untouched = np.ones(len(lens), bool)
-    untouched[rows] = False
-    ui = np.flatnonzero(untouched)
-    r_u, w_u = _ragged_indices(lens[ui])
-    out[new_starts[ui][r_u] + w_u] = vals[old_starts[ui][r_u] + w_u]
-    r_r, w_r = _ragged_indices(rows_lens)
-    out[new_starts[rows][r_r] + w_r] = rows_vals
-    return out, new_lens
 
 
 def batched_counts(
@@ -687,94 +696,18 @@ def batched_counts(
     queries,
     plan: SegmentPlan | None = None,
 ) -> Tuple[np.ndarray, Dict[str, float]]:
-    """Per-query result counts through the batched intersect kernel.
+    """Per-query result counts through the device-resident engine.
 
-    Segment groups from the planner fold pairwise in cost order: at each
-    chain stage the active groups are binned by pow2-rounded (current,
-    next-segment) lengths (the ``repro.index.batched`` layout) and
-    PAD-padded.  A group's *final* reduction runs through
-    ``intersect_count`` (Pallas kernel on TPU, jnp elsewhere);
-    intermediate stages run the vectorized membership select
-    ``intersect_members_ref`` and compact the survivors for the next
-    stage.  Counts are identical to ``HierIndex.query`` (and to the
-    ``ClusterIndex`` facade at L = 2) at any depth — the plan already
-    encodes the whole descent.
+    Delegates to :func:`repro.core.device_engine.device_counts`: the
+    index is uploaded once (cached on ``cidx``), the whole cost-ordered
+    k-way chain runs as ONE fused jit call probing the resident posting
+    array in place, and only the final counts return to host.  Counts
+    are identical to ``HierIndex.query`` (and to the ``ClusterIndex``
+    facade at L = 2) at any depth — the plan already encodes the whole
+    descent.  ``info`` reports ``n_kernel_calls``, the total
+    ``padding_overhead`` and per-stage attribution (see
+    ``device_counts``).
     """
-    import jax.numpy as jnp
+    from repro.core.device_engine import device_counts
 
-    from repro.kernels.intersect.ops import intersect_count
-    from repro.kernels.intersect.ref import intersect_members_ref
-
-    cq = as_queries(queries)
-    if plan is None:
-        plan = plan_segment_pairs(cidx, cq)
-    docs_arr = cidx.index.post_docs
-    n_g = plan.n_pairs
-    pair_counts = np.zeros(n_g, np.int64)
-    true_cells = padded_cells = 0
-    if n_g:
-        r0 = plan.seg_ptr[:-1]
-        cur_lens = plan.seg_len[r0].astype(np.int64)
-        cur_vals = _ragged_gather(docs_arr, plan.seg_start[r0], cur_lens)
-        # Single-term groups need no reduction: the segment IS the result.
-        done = plan.arity == 1
-        pair_counts[done] = cur_lens[done]
-        for s in range(1, plan.max_arity):
-            act = np.flatnonzero(plan.arity > s)
-            if len(act) == 0:
-                break
-            cur_starts = _csr_starts(cur_lens)[:-1]
-            si = r0[act] + s
-            l_starts = plan.seg_start[si]
-            l_lens = plan.seg_len[si].astype(np.int64)
-            final = plan.arity[act] == s + 1
-            bs = pow2_buckets(cur_lens[act])
-            bl = pow2_buckets(l_lens)
-            key = bs * (int(bl.max()) + 1) + bl
-            order = np.argsort(key, kind="stable")
-            bounds = np.flatnonzero(
-                np.concatenate([[True], key[order][1:] != key[order][:-1]])
-            )
-            nf_rows, nf_lens, nf_vals = [], [], []
-            for lo, hi in zip(bounds, np.append(bounds[1:], len(act))):
-                idxs = order[lo:hi]  # positions within the active set
-                g = act[idxs]
-                short = gather_padded(
-                    cur_vals, cur_starts[g], cur_lens[g], int(bs[idxs[0]])
-                )
-                long = gather_padded(
-                    docs_arr, l_starts[idxs], l_lens[idxs], int(bl[idxs[0]])
-                )
-                true_cells += int(cur_lens[g].sum() + l_lens[idxs].sum())
-                padded_cells += short.size + long.size
-                fmask = final[idxs]
-                if fmask.all():
-                    pair_counts[g] = np.asarray(
-                        intersect_count(jnp.asarray(short), jnp.asarray(long))
-                    )
-                    continue
-                hit = np.asarray(
-                    intersect_members_ref(jnp.asarray(short), jnp.asarray(long))
-                )
-                cnt = hit.sum(axis=1)
-                pair_counts[g[fmask]] = cnt[fmask]
-                nf = ~fmask
-                nf_rows.append(g[nf])
-                nf_lens.append(cnt[nf].astype(np.int64))
-                nf_vals.append(short[nf][hit[nf]])
-            if nf_rows:
-                cur_vals, cur_lens = _csr_update(
-                    cur_vals,
-                    cur_lens,
-                    np.concatenate(nf_rows),
-                    np.concatenate(nf_vals) if nf_vals else np.empty(0, np.int32),
-                    np.concatenate(nf_lens),
-                )
-    counts = np.bincount(
-        plan.pair_query, weights=pair_counts, minlength=plan.n_queries
-    ).astype(np.int64)
-    info = {
-        "n_pairs": float(plan.n_pairs),
-        "padding_overhead": float(padded_cells / max(true_cells, 1)),
-    }
-    return counts, info
+    return device_counts(cidx, queries, plan=plan)

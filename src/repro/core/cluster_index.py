@@ -126,6 +126,11 @@ class ClusterIndex:
 
         return batched_query(self, queries)
 
+    def device(self):
+        """The upload-once device mirror (cached on the shared L = 2
+        hierarchical view — see :meth:`HierIndex.device`)."""
+        return self.as_hier().device()
+
 
 def build_cluster_index(
     reordered_index: InvertedIndex,

@@ -297,6 +297,16 @@ class HierIndex:
 
         return batched_query(self, queries)
 
+    def device(self):
+        """The upload-once device mirror of this index
+        (:class:`repro.core.device_engine.DeviceIndex`): ``post_docs``
+        and every level CSR resident as device arrays, built on first
+        call and cached on this object — every device batch afterwards
+        reuses the same copy."""
+        from repro.core.device_engine import device_index
+
+        return device_index(self)
+
 
 # ----------------------------------------------------------------------
 # Construction

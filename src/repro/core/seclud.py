@@ -73,6 +73,9 @@ class SecludResult:
     level_assigns: Tuple[np.ndarray, ...] = ()  # doc -> node id per level
     psi_levels: Tuple[float, ...] = ()  # ψ priced at each cluster level
     hier_index: Optional[HierIndex] = None
+    # Upload-once device mirror of hier_index (repro.core.device_engine),
+    # built by fit() so serving never pays the upload per batch.
+    device_index: Optional[object] = None
 
     @property
     def s_t(self) -> float:
@@ -251,12 +254,21 @@ class SecludPipeline:
             bucket_size_clusters=self.bucket_size_clusters,
             bucket_size_postings=self.bucket_size,
         )
+        if levels == 2:
+            # The two-level facade's cached hier view IS this index:
+            # share one object so the device upload is shared too.
+            cidx.__dict__["_hier"] = hier
         psi_levels = tuple(
             psi_from_counts(
                 cluster_counts(view, a, len(r) - 1), view.p_freq
             )
             for a, r in zip(level_assigns, level_ranges)
         )
+        # Upload the index once, now: every device batch (benchmarks,
+        # SearchService, batched_counts) reuses this resident copy.
+        from repro.core.device_engine import device_index as _build_device_index
+
+        dev = _build_device_index(hier)
         return SecludResult(
             assign=assign,
             k=k_actual,
@@ -275,6 +287,7 @@ class SecludPipeline:
             level_assigns=tuple(level_assigns),
             psi_levels=psi_levels,
             hier_index=hier,
+            device_index=dev,
         )
 
     def _cluster_the_clusters(

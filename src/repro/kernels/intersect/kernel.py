@@ -34,7 +34,12 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 
 from repro.kernels.intersect.ref import PAD
 
-__all__ = ["intersect_count_kernel", "PAD"]
+__all__ = [
+    "intersect_count_kernel",
+    "intersect_members_kernel",
+    "intersect_members_count_kernel",
+    "PAD",
+]
 
 
 def _kernel(short_ref, long_ref, out_ref, *, tile_l: int):
@@ -72,6 +77,144 @@ def _kernel(short_ref, long_ref, out_ref, *, tile_l: int):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     out_ref[...] += acc[:, None]
+
+
+# ----------------------------------------------------------------------
+# Members kernel: per-tile binary probe instead of walking every tile
+# ----------------------------------------------------------------------
+
+
+def _probe_hits(s_tile, l_row, *, tile_l: int):
+    """Hit mask (BQ, TS) of a short tile against the resident long row.
+
+    Instead of the all-pairs walk over every long tile, the candidate
+    tile range is *probed*: the per-tile start values (free for sorted
+    rows: lane 0 of each tile) give monotone lower/upper envelopes
+    ``M_j = max_rows start`` / ``m_j = min_rows start``, and a rank count
+    against the short tile's value range [smin, smax] — a vectorized
+    binary search over the tile directory — yields the only tiles any
+    row could match.  All-pairs equality runs just inside that range;
+    with cluster-contiguous reordering (paper §3.3) it is typically one
+    or two tiles.
+
+    Only the LONG rows must be sorted (PAD last) — the probe range comes
+    from their tile directory.  Short rows may carry PAD holes anywhere
+    (a masked k-way fold feeds exactly that), so both range ends are
+    masked reductions, never a lane-0 shortcut.
+    """
+    bq, ts = s_tile.shape
+    ll = l_row.shape[1]
+    n_lt = ll // tile_l
+
+    valid = s_tile != PAD
+    # Masked min/max over the valid lanes: PAD holes must not poison the
+    # probe window (PAD at lane 0 would push smin to int32 max and skip
+    # every tile).  All-PAD tiles get smin = PAD, smax = -2^31, so the
+    # rank counts produce an empty range.
+    smin = jnp.min(jnp.where(valid, s_tile, PAD))
+    smax = jnp.max(jnp.where(valid, s_tile, jnp.int32(-(2**31))))
+
+    starts = l_row.reshape(bq, n_lt, tile_l)[:, :, 0]  # (BQ, n_lt)
+    upper = jnp.max(starts, axis=0)  # M_j, nondecreasing
+    lower = jnp.min(starts, axis=0)  # m_j, nondecreasing
+    # last j with M_j <= smin bounds every row's start tile from below;
+    # last j with m_j <= smax bounds every row's end tile from above.
+    # PAD-only tiles have start = PAD and fall outside both counts.
+    j_lo = jnp.maximum(jnp.sum(upper <= smin).astype(jnp.int32) - 1, 0)
+    j_hi = jnp.sum(lower <= smax).astype(jnp.int32) - 1
+
+    def body(j, hit):
+        l_tile = jax.lax.dynamic_slice(l_row, (0, j * tile_l), (bq, tile_l))
+        eq = (s_tile[:, :, None] == l_tile[:, None, :]) & valid[:, :, None]
+        return hit | jnp.any(eq, axis=2)
+
+    return jax.lax.fori_loop(j_lo, j_hi + 1, body, jnp.zeros((bq, ts), bool))
+
+
+def _members_kernel(short_ref, long_ref, out_ref, *, tile_l: int):
+    hit = _probe_hits(short_ref[...], long_ref[...], tile_l=tile_l)
+    out_ref[...] = jnp.where(hit, short_ref[...], PAD)
+
+
+def _members_count_kernel(short_ref, long_ref, out_ref, *, tile_l: int):
+    s = pl.program_id(1)
+    hit = _probe_hits(short_ref[...], long_ref[...], tile_l=tile_l)
+
+    @pl.when(s == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += hit.sum(axis=1).astype(jnp.int32)[:, None]
+
+
+def _members_call(kernel_body, out_dtype, out_cols):
+    def call(short, long, block_q, tile_s, tile_l, interpret):
+        b, ls = short.shape
+        _, ll = long.shape
+        assert b % block_q == 0 and ls % tile_s == 0 and ll % tile_l == 0
+        grid = (b // block_q, ls // tile_s)
+        cols = tile_s if out_cols is None else out_cols
+        return pl.pallas_call(
+            functools.partial(kernel_body, tile_l=tile_l),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_q, tile_s), lambda i, s: (i, s)),
+                pl.BlockSpec((block_q, ll), lambda i, s: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (block_q, cols), (lambda i, s: (i, s)) if out_cols is None else (lambda i, s: (i, 0))
+            ),
+            out_shape=jax.ShapeDtypeStruct(
+                (b, ls if out_cols is None else out_cols), out_dtype
+            ),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")
+            ),
+            interpret=interpret,
+        )(short, long)
+
+    return call
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "tile_s", "tile_l", "interpret")
+)
+def intersect_members_kernel(
+    short: jnp.ndarray,
+    long: jnp.ndarray,
+    block_q: int = 8,
+    tile_s: int = 128,
+    tile_l: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Member docs of ``short_row ∩ long_row`` per row, in place: matched
+    elements keep their value, misses become PAD (compaction — sorting
+    the PAD holes to the right — is the wrapper's job; rows stay sorted
+    so a sort IS a stable left-compaction).  Shapes must be pre-padded
+    like :func:`intersect_count_kernel`."""
+    return _members_call(_members_kernel, jnp.int32, None)(
+        short, long, block_q, tile_s, tile_l, interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "tile_s", "tile_l", "interpret")
+)
+def intersect_members_count_kernel(
+    short: jnp.ndarray,
+    long: jnp.ndarray,
+    block_q: int = 8,
+    tile_s: int = 128,
+    tile_l: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """|short_row ∩ long_row| per row — the count reduction of the
+    members probe (same per-tile binary search, no all-pairs walk over
+    non-overlapping tiles)."""
+    out = _members_call(_members_count_kernel, jnp.int32, 1)(
+        short, long, block_q, tile_s, tile_l, interpret
+    )
+    return out[:, 0]
 
 
 @functools.partial(

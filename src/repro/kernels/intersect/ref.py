@@ -15,7 +15,12 @@ import numpy as np
 # numpy scalar (not a jax array) so kernels can close over it as a literal
 PAD = np.int32(2**31 - 1)
 
-__all__ = ["intersect_count_ref", "intersect_members_ref", "PAD"]
+__all__ = [
+    "intersect_count_ref",
+    "intersect_members_ref",
+    "intersect_members_docs_ref",
+    "PAD",
+]
 
 
 @jax.jit
@@ -31,6 +36,18 @@ def intersect_members_ref(short: jnp.ndarray, long: jnp.ndarray) -> jnp.ndarray:
     pos = jax.vmap(jnp.searchsorted)(long, short)
     pos = jnp.minimum(pos, long.shape[1] - 1)
     return (jnp.take_along_axis(long, pos, axis=1) == short) & (short != PAD)
+
+
+@jax.jit
+def intersect_members_docs_ref(
+    short: jnp.ndarray, long: jnp.ndarray
+) -> jnp.ndarray:
+    """PAD-compacted member docs per row (B, Ls): the elements of
+    ``short_row ∩ long_row`` left-aligned and sorted, PAD filling the
+    rest.  Misses become PAD (= int32 max); rows are sorted, so one sort
+    is a stable left-compaction of the survivors."""
+    hit = intersect_members_ref(short, long)
+    return jnp.sort(jnp.where(hit, short, PAD), axis=1)
 
 
 @jax.jit

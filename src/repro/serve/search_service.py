@@ -79,6 +79,7 @@ class PackedClusters:
 class SearchService:
     def __init__(self, result: SecludResult):
         self.res = result
+        self._device_index = None
 
     @property
     def query_index(self):
@@ -87,6 +88,19 @@ class SearchService:
         ``cluster_index`` (stub results in tests, old pickles)."""
         hier = getattr(self.res, "hier_index", None)
         return hier if hier is not None else self.res.cluster_index
+
+    @property
+    def device_index(self):
+        """The upload-once :class:`repro.core.device_engine.DeviceIndex`
+        serving this service's device paths.  Built on first access (or
+        inherited from ``SecludPipeline.fit``, which caches it on the
+        fitted index) and reused by every subsequent batch — the index
+        arrays never travel host -> device again."""
+        if self._device_index is None:
+            from repro.core.device_engine import device_index
+
+            self._device_index = device_index(self.query_index)
+        return self._device_index
 
     # -- host path -------------------------------------------------------
 
@@ -101,6 +115,25 @@ class SearchService:
         return np.diff(ptr).astype(np.int64), {"work": work["total"]}
 
     # -- device path ------------------------------------------------------
+
+    def serve_counts_device(self, queries, return_docs: bool = False):
+        """Exact per-query counts through the device-resident engine.
+
+        The whole cost-ordered k-way chain runs as one fused jit call
+        against the persistent :attr:`device_index`; only the counts
+        (and, on request, the member doc ids) return to host.  Counts
+        are bit-identical to :meth:`serve_counts`; ``info`` carries the
+        engine's ``n_kernel_calls`` / ``padding_overhead`` attribution
+        instead of the host path's work metric.
+        """
+        from repro.core.device_engine import device_counts
+
+        return device_counts(
+            self.query_index,
+            queries,
+            dindex=self.device_index,
+            return_docs=return_docs,
+        )
 
     def pack(self, queries, pad_to: int = 128, pin_top: bool = False) -> PackedClusters:
         """Build the fixed-shape per-(query, leaf-cluster) segment batch.
@@ -158,8 +191,7 @@ class SearchService:
         """Intersect all rows on device; segment-sum counts per query.
         With a mesh, rows are sharded over the data axis and results
         combined with one psum_scatter-equivalent reduction."""
-        from repro.kernels.intersect.ops import intersect_count
-        from repro.kernels.intersect.ref import intersect_members_ref
+        from repro.kernels.intersect.ops import intersect_count, intersect_members
 
         nq = packed.n_queries
         if packed.short.shape[0] == 0:
@@ -176,12 +208,14 @@ class SearchService:
             else:
                 # Masked pairwise fold: rows keep their running
                 # intersection in the rank-0 block; rank r filters it for
-                # rows with arity > r, then survivors are counted.
+                # rows with arity > r, then survivors are counted.  The
+                # select runs through the members probe (Pallas kernel on
+                # TPU, jnp searchsorted elsewhere).
                 cur = segs[0]
                 for r in range(1, len(segs)):
-                    hit = intersect_members_ref(cur, segs[r])
+                    masked = intersect_members(cur, segs[r], reduce="mask")
                     active = (ra > r)[:, None]
-                    cur = jnp.where(active & ~hit, PAD, cur)
+                    cur = jnp.where(active, masked, cur)
                 c = (cur != PAD).sum(axis=1).astype(jnp.int32)
             return jax.ops.segment_sum(c, rq, num_segments=nq)
 

@@ -8,7 +8,7 @@ this repo is grown in) still *run* every property test — the fallback draws
 tests keep their coverage, deterministically, just without shrinking.
 
 Only the strategy surface this test-suite uses is implemented:
-``integers``, ``lists``, ``sampled_from``, ``data``.
+``integers``, ``lists``, ``sampled_from``, ``booleans``, ``data``.
 """
 
 from __future__ import annotations
@@ -66,6 +66,10 @@ except ModuleNotFoundError:
         def sampled_from(seq):
             seq = list(seq)
             return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
 
         @staticmethod
         def data():

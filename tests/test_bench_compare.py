@@ -3,18 +3,25 @@ slowdown (and stay quiet on healthy runs)."""
 
 import json
 
-from benchmarks.compare import compare, engine_speedups, main
+from benchmarks.compare import (
+    compare,
+    engine_device_ratios,
+    engine_speedups,
+    main,
+)
 
 
-def _doc(speedups, total_seconds=30.0, errors=()):
-    rows = [
-        {
-            "name": name,
-            "us_per_call": 100.0,
-            "derived": f"loop_s=1.0;host_s=0.05;host_speedup={s:.1f}x;pad_overhead=1.5",
-        }
-        for name, s in speedups.items()
-    ]
+def _doc(speedups, total_seconds=30.0, errors=(), device_s=None, host_s=0.05):
+    """``device_s`` maps row name -> device seconds (None = 0.04 for all;
+    the value False omits the device fields, like a pre-device baseline)."""
+    rows = []
+    for name, s in speedups.items():
+        dev = 0.04 if device_s is None else device_s.get(name, 0.04)
+        derived = f"loop_s=1.0;host_s={host_s};"
+        if dev is not False:
+            derived += f"device_s={dev};"
+        derived += f"host_speedup={s:.1f}x;pad_overhead=1.1"
+        rows.append({"name": name, "us_per_call": 100.0, "derived": derived})
     return {
         "suites": ["speedups"],
         "quick": True,
@@ -55,6 +62,45 @@ def test_gate_trips_on_injected_speedup_regression():
     fails = compare(_doc(BASE), _doc(slow))
     assert len(fails) == 1
     assert "batched_engine/n1000" in fails[0] and "regressed" in fails[0]
+
+
+def test_engine_device_ratios_parses_rows():
+    doc = _doc(BASE, device_s={k: 0.04 for k in BASE})
+    assert engine_device_ratios(doc) == {k: 0.04 / 0.05 for k in BASE}
+    # rows without the fields (old baselines) are simply absent
+    old = _doc(BASE, device_s={k: False for k in BASE})
+    assert engine_device_ratios(old) == {}
+
+
+def test_gate_trips_on_injected_device_slowdown():
+    """Satellite: a device-path regression must fail CI even when the
+    host speedup is perfectly healthy."""
+    name = "speedups/forum/batched_engine_a3/n1000"
+    slow = _doc(BASE, device_s={name: 0.2})  # 0.8 -> 4.0 ratio
+    fails = compare(_doc(BASE), slow)
+    assert len(fails) == 1
+    assert name in fails[0] and "device/host ratio regressed" in fails[0]
+
+
+def test_gate_trips_when_device_crosses_host():
+    """A device path that flips from winning to losing fails even inside
+    the relative tolerance."""
+    name = "speedups/forum/batched_engine_a5/n1000"
+    base = _doc(BASE, device_s={name: 0.0475})  # ratio 0.95: winning
+    fresh = _doc(BASE, device_s={name: 0.0525})  # ratio 1.05: now losing,
+    fails = compare(base, fresh)  # but only ~10% growth (< 25%)
+    assert len(fails) == 1
+    assert name in fails[0] and "lost to the host path" in fails[0]
+
+
+def test_device_gate_tolerates_old_baselines():
+    """Baselines recorded before the device_s field existed warn instead
+    of failing (and fresh rows missing the field warn too)."""
+    old = _doc(BASE, device_s={k: False for k in BASE})
+    assert compare(old, _doc(BASE)) == []
+    warnings = []
+    assert compare(_doc(BASE), old, warnings=warnings) == []
+    assert sum("device-path gate skipped" in w for w in warnings) == len(BASE)
 
 
 def test_gate_trips_on_wallclock_regression():
@@ -151,5 +197,11 @@ def test_repo_baseline_is_committed_and_gateable():
 
     all_names = row_names(doc)
     for want in ("/hier_engine/L1", "/hier_engine/L2", "/hier_engine/L3",
-                 "/adaptive_vs_lookup/"):
+                 "/adaptive_vs_lookup/", "/device_engine/a2",
+                 "/device_engine/a3", "/device_engine/a5"):
         assert any(want in n for n in all_names), (want, sorted(all_names))
+    # The device path must be baselined as WINNING (ratio <= 1.0) at
+    # every arity so the cross-over gate has teeth.
+    ratios = engine_device_ratios(doc)
+    assert set(ratios) == set(sp), sorted(ratios)
+    assert all(r <= 1.0 for r in ratios.values()), ratios

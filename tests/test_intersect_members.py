@@ -1,0 +1,187 @@
+"""The members-returning intersect kernel vs the ``np.intersect1d``
+oracle — tier-1 (the jnp fallback and the kernel's interpret mode both
+run on CPU; no TPU marker).
+
+Contract: ``short`` (B, Ls) / ``long`` (B, Ll) are rows of sorted int32
+ids padded with PAD; ``intersect_members`` returns the PAD-compacted
+member docs (``reduce="docs"``), the in-place masked docs
+(``reduce="mask"``) or the count reduction (``reduce="count"``) — all
+three bit-identical between the Pallas kernel (per-tile binary probe)
+and the pure-jnp reference.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
+
+from repro.kernels.intersect.ops import intersect_members
+from repro.kernels.intersect.ref import (
+    PAD,
+    intersect_members_docs_ref,
+    intersect_members_ref,
+)
+
+IPAD = int(PAD)
+
+
+def _rows(rng, b, ls, ll, universe, dup_rate=0.0):
+    short = np.full((b, ls), PAD, np.int32)
+    long = np.full((b, ll), PAD, np.int32)
+    for r in range(b):
+        ns = int(rng.integers(0, ls + 1))
+        nl = int(rng.integers(0, ll + 1))
+        sv = np.sort(rng.integers(0, universe, ns)) if dup_rate else np.sort(
+            rng.choice(universe, min(ns, universe), replace=False)
+        )
+        lv = np.sort(rng.choice(universe, min(nl, universe), replace=False))
+        short[r, : len(sv)] = sv
+        long[r, : len(lv)] = lv
+    return short, long
+
+
+def _brute_docs(short, long):
+    """Membership semantics: every short element present in long survives
+    (duplicates in short are retained, unlike np.intersect1d)."""
+    out = np.full_like(short, PAD)
+    for r in range(short.shape[0]):
+        l = set(long[r][long[r] != IPAD].tolist())
+        keep = [x for x in short[r].tolist() if x != IPAD and x in l]
+        out[r, : len(keep)] = keep
+    return out
+
+
+def _check_all_paths(short, long):
+    want = _brute_docs(short, long)
+    ref_docs = np.asarray(intersect_members_docs_ref(short, long))
+    np.testing.assert_array_equal(ref_docs, want)
+    for reduce, expect in (
+        ("docs", want),
+        ("count", (want != IPAD).sum(axis=1).astype(np.int32)),
+    ):
+        got_ref = np.asarray(intersect_members(short, long, reduce=reduce))
+        got_kern = np.asarray(
+            intersect_members(short, long, reduce=reduce, force_kernel=True)
+        )
+        np.testing.assert_array_equal(got_ref, expect)
+        np.testing.assert_array_equal(got_kern, expect)
+    # mask mode: same survivors in place (sorting compacts them)
+    for force in (False, True):
+        masked = np.asarray(
+            intersect_members(short, long, reduce="mask", force_kernel=force)
+        )
+        np.testing.assert_array_equal(np.sort(masked, axis=1), want)
+        hit = masked != IPAD
+        np.testing.assert_array_equal(masked[hit], short[hit])
+
+
+def test_members_matches_intersect1d_oracle():
+    rng = np.random.default_rng(0)
+    short, long = _rows(rng, 6, 40, 90, universe=300)
+    # unique rows: membership == np.intersect1d exactly
+    want = _brute_docs(short, long)
+    for r in range(short.shape[0]):
+        inter = np.intersect1d(
+            short[r][short[r] != IPAD], long[r][long[r] != IPAD]
+        )
+        np.testing.assert_array_equal(want[r, : len(inter)], inter)
+        assert (want[r, len(inter):] == IPAD).all()
+    _check_all_paths(short, long)
+
+
+def test_members_pad_only_rows():
+    short = np.full((4, 32), PAD, np.int32)
+    long = np.full((4, 64), PAD, np.int32)
+    _check_all_paths(short, long)
+    # PAD never matches PAD even though both sides are full of it
+    assert (np.asarray(intersect_members(short, long, reduce="count")) == 0).all()
+
+
+def test_members_empty_short_or_long_rows():
+    rng = np.random.default_rng(1)
+    short, long = _rows(rng, 6, 24, 48, universe=100)
+    short[0] = PAD  # empty short row
+    long[1] = PAD  # empty long row
+    short[2] = PAD
+    long[2] = PAD  # both empty
+    _check_all_paths(short, long)
+
+
+def test_members_duplicate_doc_ids_are_retained():
+    """Duplicates inside a sorted short row each match (membership
+    semantics) — where np.intersect1d would deduplicate."""
+    short = np.array([[3, 3, 7, 7, 7, PAD, PAD, PAD]], np.int32)
+    long = np.array([[1, 3, 7, 9, PAD, PAD, PAD, PAD]], np.int32)
+    want = np.array([[3, 3, 7, 7, 7, PAD, PAD, PAD]], np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(intersect_members(short, long)), want
+    )
+    np.testing.assert_array_equal(
+        np.asarray(intersect_members(short, long, force_kernel=True)), want
+    )
+    assert int(intersect_members(short, long, reduce="count")[0]) == 5
+    assert len(np.intersect1d(short[0][:5], long[0][:4])) == 2  # the contrast
+
+
+def test_members_non_pow2_widths():
+    rng = np.random.default_rng(2)
+    for b, ls, ll in [(3, 37, 101), (5, 129, 257), (1, 13, 7), (7, 100, 300)]:
+        short, long = _rows(rng, b, ls, ll, universe=4 * ll)
+        _check_all_paths(short, long)
+
+
+def test_members_short_longer_than_long():
+    rng = np.random.default_rng(3)
+    short, long = _rows(rng, 4, 200, 24, universe=260)
+    _check_all_paths(short, long)
+
+
+def test_members_short_rows_with_pad_holes():
+    """The masked k-way fold feeds cur rows whose misses became PAD *in
+    place* — PAD holes anywhere, rows no longer sorted-with-PAD-last.
+    The kernel must match the ref on those (regression: a lane-0 PAD
+    used to collapse the probe window and drop every hit)."""
+    rng = np.random.default_rng(5)
+    short, long = _rows(rng, 6, 64, 128, universe=300)
+    # punch PAD holes into random positions, including lane 0
+    hole = rng.random(short.shape) < 0.4
+    hole[:, 0] = True
+    short = np.where(hole, PAD, short).astype(np.int32)
+    want_mask = np.asarray(intersect_members(short, long, reduce="mask"))
+    got_mask = np.asarray(
+        intersect_members(short, long, reduce="mask", force_kernel=True)
+    )
+    np.testing.assert_array_equal(got_mask, want_mask)
+    np.testing.assert_array_equal(
+        np.asarray(intersect_members(short, long, reduce="count", force_kernel=True)),
+        np.asarray(intersect_members(short, long, reduce="count")),
+    )
+    assert (want_mask != IPAD).any()  # the case actually exercises hits
+
+
+def test_members_rejects_unknown_reduce():
+    short = np.full((1, 8), PAD, np.int32)
+    with pytest.raises(ValueError):
+        intersect_members(short, short, reduce="bogus")
+
+
+def test_members_mask_is_select_step():
+    """reduce='mask' is exactly the hit-masked select the k-way fold
+    consumes: hits keep their value and position, misses become PAD."""
+    rng = np.random.default_rng(4)
+    short, long = _rows(rng, 5, 64, 128, universe=400)
+    hit = np.asarray(intersect_members_ref(short, long))
+    masked = np.asarray(intersect_members(short, long, reduce="mask"))
+    np.testing.assert_array_equal(masked, np.where(hit, short, PAD))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_members_property(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    b = data.draw(st.integers(1, 6))
+    ls = data.draw(st.integers(1, 160))
+    ll = data.draw(st.integers(1, 300))
+    universe = data.draw(st.integers(4, 2000))
+    dup = data.draw(st.booleans())
+    short, long = _rows(rng, b, ls, ll, universe, dup_rate=float(dup))
+    _check_all_paths(short, long)
