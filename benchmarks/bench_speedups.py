@@ -18,6 +18,8 @@ Two further row families (also in the smoke set):
   (reordered) vs random document orderings.
 """
 
+import sys
+
 import numpy as np
 
 from benchmarks.common import corpus_and_log, row, timed
@@ -96,6 +98,69 @@ def _device_engine_rows(corpus_name, res, query_sets):
                 f"pad_overhead={info['padding_overhead']:.2f};"
                 f"occupancy={info['occupancy']:.2f};"
                 f"stage_pad={stage_pad}",
+            )
+        )
+    return rows
+
+
+def _sharded_engine_rows(corpus_name, res, queries, shard_counts=(1, 2, 4, 8)):
+    """``sharded_engine/s{1,2,4,8}`` rows: the mesh-sharded serving path
+    (``repro.core.device_engine.sharded_device_counts``), exactness
+    asserted against the host engine at every shard count.
+
+    On the fake CPU device grid every shard shares one physical machine,
+    so wall-clock cannot exhibit the scaling — the gated quantities are
+    the deterministic load-balance model the partition earns:
+    ``agg_throughput`` = total true cells / max per-shard true cells (the
+    aggregate-speedup bound of running shards concurrently) and
+    ``efficiency`` = agg_throughput / n_shards.  Both are exact functions
+    of the (seeded, reproducible) corpus + plan, so ``benchmarks.compare``
+    gates them strictly; measured exec_s/qps ride along informationally.
+    """
+    import jax
+
+    from repro.core.device_engine import (
+        shard_mesh,
+        sharded_device_counts,
+        sharded_device_index,
+    )
+
+    cidx = res.cluster_index
+    (ptr, docs_host, _w), _ = timed(batched_query, cidx, queries, repeats=1)
+    host_counts = np.diff(ptr)
+    n_dev = len(jax.devices())
+    usable = [s for s in shard_counts if s <= n_dev]
+    dropped = [s for s in shard_counts if s > n_dev]
+    if dropped:
+        print(
+            f"# sharded_engine: dropped s={dropped} rows — only {n_dev} "
+            "device(s) visible (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8)",
+            file=sys.stderr,
+        )
+    rows = []
+    for s in usable:
+        sidx = sharded_device_index(cidx, mesh=shard_mesh(s))
+        (counts, docs, info), t_exec = timed(
+            sharded_device_counts,
+            cidx,
+            queries,
+            sidx=sidx,
+            return_docs=True,
+            repeats=3,
+        )
+        assert np.array_equal(counts, host_counts), f"sharded s{s} counts"
+        assert np.array_equal(docs, docs_host), f"sharded s{s} docs"
+        qps = len(queries) / max(t_exec, 1e-9)
+        rows.append(
+            row(
+                f"speedups/{corpus_name}/sharded_engine/s{s}",
+                t_exec,
+                f"exec_s={t_exec:.4f};qps={qps:.0f};"
+                f"agg_throughput={info['agg_throughput']:.3f};"
+                f"efficiency={info['agg_throughput'] / s:.3f};"
+                f"shards_touched={info['shards_touched']:.0f};"
+                f"resident_mb={sidx.nbytes / 1e6:.1f}",
             )
         )
     return rows
@@ -237,6 +302,8 @@ def run(quick: bool = True, corpus_name: str = "forum"):
         )
     # The persistent-DeviceIndex serving path on the same query sets.
     rows.extend(_device_engine_rows(corpus_name, last_td, query_sets))
+    # Mesh-sharded serving at 1/2/4/8 shards (fake CPU devices in CI).
+    rows.extend(_sharded_engine_rows(corpus_name, last_td, query_sets[0][1]))
     # Hierarchical engine at depths 1/2/3 (exactness asserted across
     # depths) and the §6 adaptive-vs-lookup work measurement.
     from repro.index.build import build_index

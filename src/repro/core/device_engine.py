@@ -55,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batched_query import _ragged_gather, _ragged_indices
-from repro.core.hier_index import HierIndex, as_hier
+from repro.core.hier_index import HierIndex, as_hier, shard_tops
 from repro.core.queries import as_queries
 from repro.kernels.intersect.ref import PAD
 
@@ -66,6 +66,12 @@ __all__ = [
     "lower_plan",
     "device_fold",
     "device_counts",
+    "ShardedDeviceIndex",
+    "ShardedLoweredPlan",
+    "sharded_device_index",
+    "lower_plan_sharded",
+    "sharded_device_counts",
+    "shard_mesh",
 ]
 
 _CELL_ALIGN = 8  # flat cell vector tail alignment (the only padding left)
@@ -312,16 +318,7 @@ def _search_segments(post_docs, cur, lo, hi, iters: int):
     return found
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "group_width",
-        "stage_iters",
-        "n_queries_pad",
-        "return_members",
-    ),
-)
-def _fused_fold(
+def _fold_core(
     post_docs,
     cells,
     stage_seg,
@@ -330,7 +327,9 @@ def _fused_fold(
     n_queries_pad: int,
     return_members: bool,
 ):
-    """The whole multi-stage fold on device.  Returns per-query counts
+    """The whole multi-stage fold — the traced body shared by the
+    single-device jit (:func:`_fused_fold`) and the per-shard program the
+    sharded path runs under ``shard_map``.  Returns per-query counts
     (quantized width — the caller slices), per-stage survivor totals
     (live active cells entering each stage), and — when
     ``return_members`` — the final cell vector (PAD holes in place).
@@ -363,6 +362,17 @@ def _fused_fold(
         jnp.stack(entering) if entering else jnp.zeros(0, jnp.int32)
     )
     return counts, entering_arr, (cur if return_members else None)
+
+
+_fused_fold = functools.partial(
+    jax.jit,
+    static_argnames=(
+        "group_width",
+        "stage_iters",
+        "n_queries_pad",
+        "return_members",
+    ),
+)(_fold_core)
 
 
 def device_fold(
@@ -489,5 +499,417 @@ def device_counts(
     orig_cells = _ragged_gather(
         members, perm_start[inv_order], lowered.cell_counts[inv_order]
     )
+    docs = orig_cells[orig_cells != PAD].astype(np.int32)
+    return counts, docs, info
+
+
+# ----------------------------------------------------------------------
+# Mesh-sharded serving: per-shard postings, fused fold under shard_map
+# ----------------------------------------------------------------------
+#
+# The corpus is partitioned by level-0 ancestor into S contiguous
+# doc-id ranges (``shard_tops`` balances posting mass), each shard
+# holding the postings of its own docs as one row of a stacked (S, W)
+# matrix laid over the mesh's data axis.  Because every segment group of
+# a plan lives inside ONE leaf cluster — hence one top cluster, hence
+# one shard — the global plan routes exactly: each group's cells land on
+# the shard owning its docs, untouched shards receive only dead
+# (masked) cells.  One ``shard_map`` call then runs :func:`_fold_core`
+# per shard and a single ``psum`` over the data axes produces the final
+# counts; member docs come back per-shard and are re-concatenated on
+# host in original plan-group order, bit-identical to the single-device
+# path.
+
+
+def shard_mesh(n_shards: Optional[int] = None):
+    """A ``(n_shards, 1)`` mesh over the first ``n_shards`` local devices
+    with the canonical ``("data", "model")`` axes — the serving mesh the
+    sharded engine partitions the corpus over (defaults to every
+    device)."""
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if n_shards is None:
+        n_shards = len(devs)
+    if not 1 <= n_shards <= len(devs):
+        raise ValueError(
+            f"n_shards={n_shards} outside [1, {len(devs)}] available devices"
+        )
+    return Mesh(np.asarray(devs[:n_shards]).reshape(n_shards, 1), ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedDeviceIndex:
+    """The corpus partitioned by level-0 ancestor over a mesh's data axis.
+
+    ``post_docs`` is a (S, W) matrix — row s holds shard s's postings
+    (the global postings whose doc id falls in ``[doc_bounds[s],
+    doc_bounds[s + 1])``, order preserved, PAD beyond ``shard_counts[s]``)
+    — laid out with ``NamedSharding`` so each mesh shard holds exactly
+    its own row.  ``local_pos`` maps a global posting position to its
+    position within its shard's row: a plan segment (contiguous globally,
+    wholly inside one leaf cluster and therefore one shard) stays
+    contiguous locally, so lowering only remaps segment starts.
+    """
+
+    mesh: object  # jax.sharding.Mesh
+    n_shards: int
+    top_bounds: np.ndarray  # (S + 1,) level-0 node boundaries per shard
+    doc_bounds: np.ndarray  # (S + 1,) doc-id boundaries per shard
+    post_docs: object  # jax.Array (S, W) int32, sharded P(data, None)
+    post_width: int  # W — quantized max shard posting count
+    local_pos: np.ndarray  # (n_postings,) int64 — global -> within-shard
+    shard_counts: np.ndarray  # (S,) int64 — true postings per shard
+    search_iters: int
+    host: HierIndex
+
+    @property
+    def nbytes(self) -> int:
+        """Total resident bytes across the mesh (PAD tail included)."""
+        return int(self.post_docs.nbytes)
+
+
+def sharded_device_index(
+    cidx, mesh=None, n_shards: Optional[int] = None
+) -> ShardedDeviceIndex:
+    """The cached :class:`ShardedDeviceIndex` of ``cidx`` over ``mesh``
+    (built from ``n_shards`` local devices when omitted).  Cached per
+    mesh on the host ``HierIndex``, so re-serving after a remesh (shard
+    failover) rebuilds once and every later batch reuses the upload."""
+    from repro.dist import sharding as sh
+    from jax.sharding import NamedSharding
+
+    hidx = as_hier(cidx)
+    if mesh is None:
+        mesh = shard_mesh(n_shards)
+    cache = getattr(hidx, "_sharded_indexes", None)
+    if cache is None:
+        cache = {}
+        hidx._sharded_indexes = cache
+    cached = cache.get(mesh)
+    if cached is not None:
+        return cached
+
+    S = sh.axes_size(mesh, sh.data_spec(mesh))
+    top_bounds = shard_tops(hidx, S)
+    doc_bounds = hidx.top_ranges[top_bounds].astype(np.int64)
+    docs = np.asarray(hidx.index.post_docs, np.int64)
+    n_post = len(docs)
+    shard_of = np.clip(
+        np.searchsorted(doc_bounds, docs, side="right") - 1, 0, S - 1
+    )
+    shard_counts = np.bincount(shard_of, minlength=S).astype(np.int64)
+    shard_off = np.concatenate([[0], np.cumsum(shard_counts)])
+    order = np.argsort(shard_of, kind="stable")
+    local = np.arange(n_post, dtype=np.int64) - np.repeat(
+        shard_off[:-1], shard_counts
+    )
+    local_pos = np.empty(n_post, np.int64)
+    local_pos[order] = local
+    width = _quantize(int(shard_counts.max()) if n_post else 1)
+    stacked = np.full((S, width), PAD, np.int32)
+    stacked[shard_of, local_pos] = docs.astype(np.int32)
+    max_len = int(shard_counts.max()) if n_post else 0
+    sidx = ShardedDeviceIndex(
+        mesh=mesh,
+        n_shards=S,
+        top_bounds=top_bounds,
+        doc_bounds=doc_bounds,
+        post_docs=jax.device_put(
+            stacked, NamedSharding(mesh, sh.postings_spec(mesh))
+        ),
+        post_width=width,
+        local_pos=local_pos,
+        shard_counts=shard_counts,
+        search_iters=max(max_len.bit_length(), 1),
+        host=hidx,
+    )
+    cache[mesh] = sidx
+    return sidx
+
+
+def _take_groups(plan, g_idx: np.ndarray, sidx: ShardedDeviceIndex):
+    """The sub-:class:`SegmentPlan` of groups ``g_idx``, segment starts
+    remapped into the owning shard's local postings row.  Query ids stay
+    global — per-shard counts segment-sum into the full query range and
+    the cross-shard psum adds disjoint contributions."""
+    from repro.core.batched_query import SegmentPlan
+
+    arity = plan.arity[g_idx].astype(np.int64)
+    rows, within = _ragged_indices(arity)
+    si = plan.seg_ptr[:-1][g_idx][rows] + within
+    seg_len = plan.seg_len[si]
+    gstart = plan.seg_start[si]
+    n_post = len(sidx.local_pos)
+    # Empty segments may sit at the postings tail (start == n_postings):
+    # clamp the lookup, their remapped start is never probed.
+    seg_start = np.where(
+        seg_len > 0,
+        sidx.local_pos[np.minimum(gstart, max(n_post - 1, 0))],
+        0,
+    )
+    return SegmentPlan(
+        pair_query=plan.pair_query[g_idx],
+        cluster=plan.cluster[g_idx],
+        base=plan.base[g_idx],
+        width=plan.width[g_idx],
+        arity=arity,
+        seg_ptr=np.concatenate([[0], np.cumsum(arity)]).astype(np.int64),
+        seg_start=seg_start.astype(np.int64),
+        seg_len=seg_len.astype(np.int64),
+        cluster_work=np.zeros(plan.n_queries, np.int64),
+        n_queries=plan.n_queries,
+        max_arity=int(plan.max_arity),
+    )
+
+
+@dataclasses.dataclass
+class ShardedLoweredPlan:
+    """A :class:`SegmentPlan` lowered per shard and stacked for one
+    ``shard_map`` dispatch: shard s's cells/segments sit in row s (dead
+    cells where another shard owns the group), shapes unified across
+    shards so a single compiled program serves the whole mesh.
+    ``grp_shard`` / ``grp_off`` / ``grp_cnt`` locate every original plan
+    group inside the stacked member matrix — the host-side gather that
+    restores single-device doc order exactly."""
+
+    cells: np.ndarray  # (S, 4, C) int32 — per-shard cell layout
+    stage_seg: np.ndarray  # (S, 2, n_stages * group_width) int32
+    group_width: int  # unified quantized per-stage width
+    stage_iters: Tuple[int, ...]  # per-stage max binary-search depth
+    n_queries: int
+    n_queries_pad: int
+    n_cells_true: np.ndarray  # (S,) true cells per shard (load balance)
+    grp_shard: np.ndarray  # (G,) owning shard of each original group
+    grp_off: np.ndarray  # (G,) cell offset inside the shard's row
+    grp_cnt: np.ndarray  # (G,) cells of the group (= rank-0 len)
+    shards_touched: int
+    n_shards: int
+
+    @property
+    def n_cells(self) -> int:
+        return self.cells.shape[2]
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_iters)
+
+
+def lower_plan_sharded(plan, sidx: ShardedDeviceIndex) -> ShardedLoweredPlan:
+    """Route a global plan's groups to their owning shards and lower each
+    shard's slice (pure numpy).  A group's top-level ancestor decides its
+    shard — the level-0 descent IS the router; shards outside the batch's
+    descent receive only dead cells and contribute nothing but a masked
+    no-op to the fused fold."""
+    S = sidx.n_shards
+    top = np.searchsorted(sidx.host.top_ranges, plan.base, side="right") - 1
+    gshard = np.clip(
+        np.searchsorted(sidx.top_bounds, top, side="right") - 1, 0, S - 1
+    ).astype(np.int64)
+
+    lowereds = {}
+    for s in np.unique(gshard):
+        g_idx = np.flatnonzero(gshard == s)
+        lowereds[int(s)] = (g_idx, lower_plan(_take_groups(plan, g_idx, sidx)))
+
+    # Unify shapes across shards: one compiled executable for the mesh.
+    width = max(low.group_width for _, low in lowereds.values())
+    n_cells = max(low.n_cells for _, low in lowereds.values())
+    n_stages = max(low.n_stages for _, low in lowereds.values())
+    iters = [0] * n_stages
+    for _, low in lowereds.values():
+        for t, it in enumerate(low.stage_iters):
+            iters[t] = max(iters[t], it)
+    n_queries = plan.n_queries
+
+    cells = np.empty((S, 4, n_cells), np.int32)
+    cells[:, 0] = -1
+    cells[:, 1] = width
+    cells[:, 2] = n_queries
+    cells[:, 3] = 0
+    stage_seg = np.zeros((S, 2, n_stages * width), np.int32)
+    n_true = np.zeros(S, np.int64)
+    n_groups = plan.n_pairs
+    grp_off = np.zeros(n_groups, np.int64)
+    grp_cnt = np.zeros(n_groups, np.int64)
+    for s, (g_idx, low) in lowereds.items():
+        cells[s, :, : low.n_cells] = low.cells
+        gw = low.group_width
+        for t in range(low.n_stages):
+            stage_seg[s, :, t * width : t * width + gw] = low.stage_seg[
+                :, t * gw : (t + 1) * gw
+            ]
+        n_true[s] = low.n_cells_true
+        perm_start = np.concatenate([[0], np.cumsum(low.cell_counts)])[:-1]
+        inv = np.empty(len(low.order), np.int64)
+        inv[low.order] = np.arange(len(low.order))
+        grp_off[g_idx] = perm_start[inv]
+        grp_cnt[g_idx] = low.cell_counts[inv]
+    return ShardedLoweredPlan(
+        cells=cells,
+        stage_seg=stage_seg,
+        group_width=width,
+        stage_iters=tuple(iters),
+        n_queries=n_queries,
+        n_queries_pad=_quantize(n_queries),
+        n_cells_true=n_true,
+        grp_shard=gshard,
+        grp_off=grp_off,
+        grp_cnt=grp_cnt,
+        shards_touched=len(lowereds),
+        n_shards=S,
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _build_sharded_fold(
+    mesh,
+    group_width: int,
+    stage_iters: Tuple[int, ...],
+    n_queries_pad: int,
+    return_members: bool,
+):
+    """The compiled sharded fold for one (mesh, quantized-shape) key:
+    ``shard_map`` runs :func:`_fold_core` on each shard's row and a
+    single ``psum`` over the data axes produces the global counts —
+    cached so batches of similar size reuse one executable, exactly like
+    the single-device jit cache."""
+    import inspect
+
+    from jax.experimental.shard_map import shard_map
+
+    from repro.dist import sharding as sh
+
+    dp_axes = sh.batch_axes(mesh)
+    cells_spec, seg_spec = sh.plan_specs(mesh)
+
+    def body(post_docs, cells, stage_seg):
+        counts, entering, cur = _fold_core(
+            post_docs[0],
+            cells[0],
+            stage_seg[0],
+            group_width=group_width,
+            stage_iters=stage_iters,
+            n_queries_pad=n_queries_pad,
+            return_members=return_members,
+        )
+        counts = jax.lax.psum(counts, dp_axes)
+        if stage_iters:
+            entering = jax.lax.psum(entering, dp_axes)
+        if return_members:
+            return counts, entering, cur[None]
+        return counts, entering
+
+    # check_rep=False where supported: the body nests the fused fold,
+    # whose replication jax 0.4.x's checker cannot track; the psum is
+    # what establishes the replication of the counts.
+    kw = {}
+    try:
+        if "check_rep" in inspect.signature(shard_map).parameters:
+            kw["check_rep"] = False
+    except (ValueError, TypeError):  # pragma: no cover
+        pass
+    from jax.sharding import PartitionSpec as P
+
+    out_specs = (P(), P())
+    if return_members:
+        out_specs = out_specs + (sh.postings_spec(mesh),)
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(sh.postings_spec(mesh), cells_spec, seg_spec),
+        out_specs=out_specs,
+        **kw,
+    )
+    return jax.jit(fn)
+
+
+def sharded_device_counts(
+    cidx,
+    queries,
+    plan=None,
+    sidx: Optional[ShardedDeviceIndex] = None,
+    return_docs: bool = False,
+):
+    """Per-query result counts over the mesh-sharded corpus — one
+    ``shard_map`` dispatch, counts combined with one psum.
+
+    ``cidx`` is any host index (or a :class:`ShardedDeviceIndex`, whose
+    mesh is then reused).  Counts AND member docs are bit-identical to
+    :func:`device_counts` and the host loop: the plan is global, each
+    group's work runs on the one shard owning its docs, and docs are
+    re-gathered in original plan-group order on host.
+
+    ``info`` adds the sharding attribution: ``n_shards``,
+    ``shards_touched`` (level-0 routing), ``shard_cells`` (true cells
+    per shard), ``agg_throughput`` (total true cells / max per-shard true
+    cells — the deterministic load-balance speedup bound) and
+    ``load_balance`` (= agg_throughput / n_shards, the scaling
+    efficiency)."""
+    from repro.core.batched_query import plan_segment_pairs
+
+    cq = as_queries(queries)
+    if sidx is None:
+        sidx = (
+            cidx
+            if isinstance(cidx, ShardedDeviceIndex)
+            else sharded_device_index(cidx)
+        )
+    if plan is None:
+        plan = plan_segment_pairs(sidx.host, cq, track_work=False)
+    if plan.n_pairs == 0:
+        counts = np.zeros(plan.n_queries, np.int64)
+        info = {
+            "n_pairs": 0.0,
+            "n_kernel_calls": 0.0,
+            "n_shards": float(sidx.n_shards),
+            "shards_touched": 0.0,
+            "shard_cells": [0.0] * sidx.n_shards,
+            "agg_throughput": 1.0,
+            "load_balance": 1.0 / max(sidx.n_shards, 1),
+            "padding_overhead": 1.0,
+        }
+        if return_docs:
+            return counts, np.empty(0, np.int32), info
+        return counts, info
+
+    lowered = lower_plan_sharded(plan, sidx)
+    fold = _build_sharded_fold(
+        sidx.mesh,
+        lowered.group_width,
+        lowered.stage_iters,
+        lowered.n_queries_pad,
+        bool(return_docs),
+    )
+    out = fold(
+        sidx.post_docs,
+        jnp.asarray(lowered.cells),
+        jnp.asarray(lowered.stage_seg),
+    )
+    counts = np.asarray(out[0])[: lowered.n_queries].astype(np.int64)
+    total_true = float(lowered.n_cells_true.sum())
+    max_true = float(lowered.n_cells_true.max())
+    info = {
+        "n_pairs": float(plan.n_pairs),
+        "n_kernel_calls": 1.0,
+        "n_shards": float(lowered.n_shards),
+        "shards_touched": float(lowered.shards_touched),
+        "shard_cells": lowered.n_cells_true.astype(float).tolist(),
+        "agg_throughput": total_true / max(max_true, 1.0),
+        "load_balance": total_true
+        / max(lowered.n_shards * max_true, 1.0),
+        "padding_overhead": float(lowered.n_shards * lowered.n_cells)
+        / max(total_true, 1.0),
+    }
+    if not return_docs:
+        return counts, info
+
+    # Per-shard members -> original plan-group order: each group's cells
+    # sit contiguously inside its owning shard's row; gathering rows in
+    # group order and dropping PAD holes restores exactly the
+    # single-device (and host-loop) doc array.
+    members = np.asarray(out[2]).reshape(-1)
+    starts = lowered.grp_shard * lowered.n_cells + lowered.grp_off
+    orig_cells = _ragged_gather(members, starts, lowered.grp_cnt)
     docs = orig_cells[orig_cells != PAD].astype(np.int32)
     return counts, docs, info

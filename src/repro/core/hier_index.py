@@ -58,6 +58,7 @@ __all__ = [
     "HierIndex",
     "build_hier_index",
     "as_hier",
+    "shard_tops",
 ]
 
 
@@ -133,6 +134,85 @@ class HierIndex:
         if self.levels:
             return self.levels[-1].ranges
         return np.array([0, self.index.n_docs], dtype=np.int64)
+
+    @property
+    def top_ranges(self) -> np.ndarray:
+        """Level-0 (coarsest) node doc-id boundaries — the machine-level
+        partitioning unit (one implicit root for the flat L = 1 index)."""
+        if self.levels:
+            return self.levels[0].ranges
+        return np.array([0, self.index.n_docs], dtype=np.int64)
+
+    def slice_top(self, top_lo: int, top_hi: int) -> "HierIndex":
+        """The index restricted to top-level nodes ``[top_lo, top_hi)`` —
+        the host view of one corpus shard.
+
+        The returned index keeps the ORIGINAL doc-id space, node ids and
+        posting array (shared, no copies of ``post_docs``); only the
+        per-term CSR entries of nodes outside the top range are dropped,
+        so a query returns exactly the global result docs that live in
+        the shard's doc range.  Because every leaf cluster lies wholly in
+        one shard, summed per-shard counts (and the union of per-shard
+        result sets) reproduce the global query bit-for-bit — the oracle
+        the sharded device engine is tested against.
+        """
+        if not self.levels:
+            if (top_lo, top_hi) != (0, 1):
+                raise ValueError("flat index has exactly one top node")
+            return self
+        top = self.levels[0]
+        if not (0 <= top_lo <= top_hi <= top.k):
+            raise ValueError(
+                f"top range [{top_lo}, {top_hi}) outside [0, {top.k}]"
+            )
+        doc_lo = int(top.ranges[top_lo])
+        doc_hi = int(top.ranges[top_hi])
+        # Per level: the kept node-id range (nested ranges ⇒ doc_lo/doc_hi
+        # are boundaries of every level) and the entry keep-mask.
+        masks, shifts = [], []
+        for lev in self.levels:
+            nlo = int(np.searchsorted(lev.ranges, doc_lo))
+            nhi = int(np.searchsorted(lev.ranges, doc_hi))
+            mask = (lev.cl_ids >= nlo) & (lev.cl_ids < nhi)
+            # shift[i] = entries removed before position i (inclusive of
+            # nothing at i); one extra slot so seg_end == len remaps too.
+            shift = np.zeros(len(mask) + 1, np.int64)
+            np.cumsum(~mask, out=shift[1:])
+            masks.append(mask)
+            shifts.append(shift)
+        new_levels = []
+        m = self.index.n_terms
+        for li, lev in enumerate(self.levels):
+            mask = masks[li]
+            term_of = np.repeat(np.arange(m, dtype=np.int64), np.diff(lev.cl_ptr))
+            cl_ptr = np.zeros(m + 1, np.int64)
+            np.add.at(cl_ptr, term_of[mask] + 1, 1)
+            np.cumsum(cl_ptr, out=cl_ptr)
+            seg_start = lev.seg_start[mask]
+            seg_end = lev.seg_end[mask]
+            if li < len(self.levels) - 1:
+                # Child slices index the next level's (filtered) cl_ids: a
+                # kept node's children are all kept, so the whole slice
+                # shifts by one constant.
+                sh = shifts[li + 1]
+                seg_start = seg_start - sh[seg_start]
+                seg_end = seg_end - sh[seg_end]
+            # Leaf slices stay absolute into the shared post_docs.
+            new_levels.append(
+                HierLevel(
+                    cl_ptr=cl_ptr,
+                    cl_ids=lev.cl_ids[mask],
+                    seg_start=seg_start,
+                    seg_end=seg_end,
+                    ranges=lev.ranges,
+                )
+            )
+        return HierIndex(
+            levels=tuple(new_levels),
+            index=self.index,
+            bucket_size_clusters=self.bucket_size_clusters,
+            bucket_size_postings=self.bucket_size_postings,
+        )
 
     # ------------------------------------------------------------------
     # Descent
@@ -434,6 +514,37 @@ def build_hier_index(
         bucket_size_clusters=bucket_size_clusters,
         bucket_size_postings=bucket_size_postings,
     )
+
+
+def shard_tops(hidx: HierIndex, n_shards: int) -> np.ndarray:
+    """Contiguous partition of the top-level nodes into ``n_shards``
+    shards, balanced by posting mass.
+
+    Returns the ``(n_shards + 1,)`` top-node boundary array: shard s owns
+    top nodes ``[bounds[s], bounds[s + 1])`` — and therefore (nested
+    contiguous ranges) the contiguous doc-id range
+    ``[top_ranges[bounds[s]], top_ranges[bounds[s + 1]])`` and every
+    posting of every document in it.  Splits sit at the posting-mass
+    quantiles, so shards carry roughly equal intersection work; with more
+    shards than top nodes the tail shards come back empty (boundaries
+    repeat) rather than splitting a top node — a top cluster is the
+    paper's unit of machine-level distribution and never straddles two
+    shards.
+    """
+    hidx = as_hier(hidx)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    top_ranges = hidx.top_ranges
+    k0 = len(top_ranges) - 1
+    docs = hidx.index.post_docs.astype(np.int64)
+    top_of_post = np.searchsorted(top_ranges, docs, side="right") - 1
+    mass = np.bincount(top_of_post, minlength=k0).astype(np.int64)
+    cum = np.concatenate([[0], np.cumsum(mass)])
+    total = int(cum[-1])
+    targets = total * np.arange(1, n_shards, dtype=np.float64) / n_shards
+    cuts = np.searchsorted(cum, targets, side="left").astype(np.int64)
+    bounds = np.concatenate([[0], np.minimum(cuts, k0), [k0]])
+    return np.maximum.accumulate(bounds)
 
 
 def as_hier(idx) -> HierIndex:

@@ -82,6 +82,31 @@ class SecludResult:
         """Theoretical speedup from ψ itself (frequent terms, Eq. 2)."""
         return self.psi_single / max(self.psi, 1e-30)
 
+    def shard_slices(self, n_shards: int):
+        """Host views of the fitted index, one per corpus shard — the
+        partitioning a multi-machine deployment hands each machine.
+
+        Shards are contiguous groups of top-level clusters balanced by
+        posting mass (``repro.core.hier_index.shard_tops``); each view is
+        the fitted :class:`HierIndex` restricted to its group
+        (``slice_top``), sharing the underlying postings.  Returns
+        ``(bounds, views)`` with ``bounds`` the ``(n_shards + 1,)``
+        top-node boundaries and ``views`` the per-shard indexes.
+        """
+        from repro.core.hier_index import as_hier, shard_tops
+
+        hidx = as_hier(
+            self.hier_index
+            if self.hier_index is not None
+            else self.cluster_index
+        )
+        bounds = shard_tops(hidx, n_shards)
+        views = [
+            hidx.slice_top(int(lo), int(hi))
+            for lo, hi in zip(bounds[:-1], bounds[1:])
+        ]
+        return bounds, views
+
 
 def _corpus_of_clusters(corpus: Corpus, assign: np.ndarray, k: int) -> Corpus:
     """The corpus whose "documents" are clusters: cluster j's term set is

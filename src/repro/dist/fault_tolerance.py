@@ -138,19 +138,39 @@ class ElasticMesh:
         self.epoch = 0
         self.mesh = None
         self._excluded_hosts: set = set()
+        self._excluded_devices: set = set()
+        self._pool: Optional[list] = None
 
     def exclude_host(self, process_index: int) -> None:
         """Drop a host (e.g. a StragglerMonitor evictee) from future meshes."""
         self._excluded_hosts.add(int(process_index))
 
+    def exclude_device(self, device_id: int) -> None:
+        """Drop one device from future meshes.  The device-granular
+        analogue of :meth:`exclude_host` — on single-process test rigs
+        (fake CPU devices) every device shares ``process_index`` 0, so
+        serving-shard failover evicts by ``device.id`` instead."""
+        self._excluded_devices.add(int(device_id))
+
     def remesh(self, devices: Optional[Sequence] = None):
-        """Build the largest valid mesh from the live, non-excluded devices."""
+        """Build the largest valid mesh from the live, non-excluded
+        devices.  With no explicit ``devices`` the last remesh's pool is
+        reused (falling back to ``jax.devices()``), so eviction followed
+        by a bare ``remesh()`` shrinks the previous world."""
         import jax
         from jax.sharding import Mesh
 
-        devices = list(devices if devices is not None else jax.devices())
+        devices = list(
+            devices
+            if devices is not None
+            else (self._pool if self._pool is not None else jax.devices())
+        )
+        self._pool = list(devices)
         devices = [
-            d for d in devices if d.process_index not in self._excluded_hosts
+            d
+            for d in devices
+            if d.process_index not in self._excluded_hosts
+            and d.id not in self._excluded_devices
         ]
         shape, axes = plan_mesh_shape(
             len(devices), self.model_parallel, self.prefer_pods

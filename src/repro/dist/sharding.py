@@ -39,6 +39,8 @@ __all__ = [
     "batch_axes",
     "data_spec",
     "axes_size",
+    "postings_spec",
+    "plan_specs",
     "validate_spec",
     "lm_param_specs",
     "pna_param_specs",
@@ -115,6 +117,20 @@ def axes_size(mesh, entry) -> int:
     for a in names:
         size *= int(mesh.shape[a])
     return size
+
+
+def postings_spec(mesh) -> P:
+    """Spec of the sharded engine's stacked postings matrix (S, W): the
+    shard dim over the data axes, each shard's postings row unsplit."""
+    return P(data_spec(mesh), None)
+
+
+def plan_specs(mesh) -> Tuple[P, P]:
+    """Specs of a sharded lowered plan's two stacks — cells (S, 4, C)
+    and stage segments (S, 2, n_stages * group_width): shard dim over
+    the data axes, per-shard layout unsplit."""
+    dp = data_spec(mesh)
+    return P(dp, None, None), P(dp, None, None)
 
 
 def validate_spec(mesh, spec, shape) -> P:

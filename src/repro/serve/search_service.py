@@ -80,6 +80,9 @@ class SearchService:
     def __init__(self, result: SecludResult):
         self.res = result
         self._device_index = None
+        self._sharded = None  # ShardedDeviceIndex once enable_sharded ran
+        self._elastic = None  # ElasticMesh owning the serving device pool
+        self._monitor = None  # StragglerMonitor over the shards
 
     @property
     def query_index(self):
@@ -125,15 +128,109 @@ class SearchService:
         are bit-identical to :meth:`serve_counts`; ``info`` carries the
         engine's ``n_kernel_calls`` / ``padding_overhead`` attribution
         instead of the host path's work metric.
-        """
-        from repro.core.device_engine import device_counts
 
+        After :meth:`enable_sharded` the same call serves through the
+        mesh-sharded engine — one ``shard_map`` dispatch over the
+        per-shard corpus partitions, counts psum-combined — with results
+        still bit-identical (``info`` gains the sharding attribution).
+        """
+        from repro.core.device_engine import device_counts, sharded_device_counts
+
+        if self._sharded is not None:
+            return sharded_device_counts(
+                self.query_index,
+                queries,
+                sidx=self._sharded,
+                return_docs=return_docs,
+            )
         return device_counts(
             self.query_index,
             queries,
             dindex=self.device_index,
             return_docs=return_docs,
         )
+
+    # -- sharded serving + failover ---------------------------------------
+
+    @property
+    def sharded_index(self):
+        """The active :class:`repro.core.device_engine.ShardedDeviceIndex`
+        (None until :meth:`enable_sharded`)."""
+        return self._sharded
+
+    @property
+    def n_shards(self) -> int:
+        return self._sharded.n_shards if self._sharded is not None else 0
+
+    def enable_sharded(
+        self,
+        n_shards: Optional[int] = None,
+        mesh: Optional[Mesh] = None,
+        deadline_factor: float = 1.5,
+        strikes_to_evict: int = 3,
+    ):
+        """Partition the corpus over ``n_shards`` devices (or an explicit
+        mesh) and route :meth:`serve_counts_device` through the sharded
+        engine.
+
+        The device pool is owned by an ``ElasticMesh`` and each shard is
+        watched by a ``StragglerMonitor`` (one "host" per shard): feed
+        per-step shard times to :meth:`record_shard_times` and an evicted
+        shard's device is dropped from the pool, the mesh rebuilt one
+        shard smaller, and the corpus re-partitioned — the lost shard's
+        top-level clusters are absorbed by the survivors, results stay
+        bit-identical.
+        """
+        from repro.core.device_engine import shard_mesh, sharded_device_index
+        from repro.dist.fault_tolerance import ElasticMesh, StragglerMonitor
+
+        if mesh is None:
+            mesh = shard_mesh(n_shards)
+        self._elastic = ElasticMesh(model_parallel=1)
+        self._elastic.remesh(list(np.asarray(mesh.devices).reshape(-1)))
+        self._sharded = sharded_device_index(
+            self.query_index, mesh=self._elastic.mesh
+        )
+        self._monitor = StragglerMonitor(
+            self._sharded.n_shards,
+            deadline_factor=deadline_factor,
+            strikes_to_evict=strikes_to_evict,
+        )
+        return self._sharded
+
+    def record_shard_times(self, step_times):
+        """Report one serving step's per-shard wall-clock times.
+
+        Returns ``(verdicts, remeshed)``.  When the monitor's consecutive
+        strikes evict a shard, its device is excluded from the elastic
+        pool, the mesh rebuilt from the survivors, the corpus
+        re-partitioned over the smaller mesh (top clusters of the lost
+        shard re-routed to its neighbors) and a fresh monitor started for
+        the new shard count.
+        """
+        if self._monitor is None:
+            raise RuntimeError("sharded serving not enabled")
+        from repro.core.device_engine import sharded_device_index
+        from repro.dist.fault_tolerance import StragglerMonitor
+
+        verdicts = self._monitor.record(step_times)
+        evictees = [v.host for v in verdicts if v.evict]
+        if not evictees:
+            return verdicts, False
+        devs = np.asarray(self._sharded.mesh.devices).reshape(
+            self._sharded.n_shards, -1
+        )
+        for h in evictees:
+            for d in devs[h]:
+                self._elastic.exclude_device(int(d.id))
+        mesh = self._elastic.remesh()
+        self._sharded = sharded_device_index(self.query_index, mesh=mesh)
+        self._monitor = StragglerMonitor(
+            self._sharded.n_shards,
+            deadline_factor=self._monitor.deadline_factor,
+            strikes_to_evict=self._monitor.strikes_to_evict,
+        )
+        return verdicts, True
 
     def pack(self, queries, pad_to: int = 128, pin_top: bool = False) -> PackedClusters:
         """Build the fixed-shape per-(query, leaf-cluster) segment batch.

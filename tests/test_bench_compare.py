@@ -8,6 +8,8 @@ from benchmarks.compare import (
     engine_device_ratios,
     engine_speedups,
     main,
+    sharded_metrics,
+    write_step_summary,
 )
 
 
@@ -177,6 +179,143 @@ def test_main_exit_codes(tmp_path):
     assert main([str(fresh_p), "--baseline", str(base_p)]) == 0
 
 
+def _with_shards(doc, metrics):
+    """Append ``sharded_engine/s{N}`` rows; ``metrics`` maps shard count
+    -> (agg_throughput, efficiency) in the bench_speedups derived format."""
+    for s, (agg, eff) in metrics.items():
+        doc["rows"].append(
+            {
+                "name": f"speedups/forum/sharded_engine/s{s}",
+                "us_per_call": 1000.0,
+                "derived": f"exec_s=0.01;qps=4000.0;agg_throughput={agg:.3f};"
+                f"efficiency={eff:.3f};shards_touched={s};resident_mb=1.0",
+            }
+        )
+    return doc
+
+
+HEALTHY_SHARDS = {1: (1.0, 1.0), 2: (1.9, 0.95), 4: (3.6, 0.9), 8: (6.4, 0.8)}
+
+
+def test_sharded_metrics_parses_rows():
+    doc = _with_shards(_doc(BASE), HEALTHY_SHARDS)
+    got = sharded_metrics(doc)
+    assert set(got) == {1, 2, 4, 8}
+    assert got[8] == {"agg": 6.4, "eff": 0.8}
+    assert sharded_metrics(_doc(BASE)) == {}  # pre-sharding baseline
+
+
+def test_shard_gate_passes_on_healthy_scaling():
+    base = _with_shards(_doc(BASE), HEALTHY_SHARDS)
+    fresh = _with_shards(_doc(BASE), HEALTHY_SHARDS)
+    assert compare(base, fresh) == []
+
+
+def test_shard_gate_trips_on_non_monotone_throughput():
+    bad = dict(HEALTHY_SHARDS)
+    bad[4] = (1.5, 0.375)  # s4 now below s2: more shards, less throughput
+    fails = compare(
+        _with_shards(_doc(BASE), HEALTHY_SHARDS), _with_shards(_doc(BASE), bad)
+    )
+    assert any("not monotone" in m and "s2" in m and "s4" in m for m in fails)
+
+
+def test_shard_gate_trips_on_efficiency_floor():
+    """Satellite: the committed floor at the largest shard count has
+    teeth — an injected load-balance collapse fails the gate even when
+    throughput stays monotone."""
+    bad = dict(HEALTHY_SHARDS)
+    bad[8] = (3.7, 0.46)  # monotone (> s4's 3.6) but badly unbalanced
+    fails = compare(
+        _with_shards(_doc(BASE), HEALTHY_SHARDS),
+        _with_shards(_doc(BASE), bad),
+        min_scaling_efficiency=0.6,
+    )
+    assert any("below the committed floor" in m and "s8" in m for m in fails)
+    # the floor is a knob: a permissive floor lets the same run through
+    fails = compare(
+        _with_shards(_doc(BASE), HEALTHY_SHARDS),
+        _with_shards(_doc(BASE), bad),
+        min_scaling_efficiency=0.1,
+    )
+    assert not any("committed floor" in m for m in fails)
+    # ... but the baseline-relative regression gate still catches the drop
+    assert any("efficiency regressed" in m for m in fails)
+
+
+def test_shard_gate_trips_on_baseline_efficiency_regression():
+    worse = dict(HEALTHY_SHARDS)
+    worse[8] = (5.0, 0.625)  # above the 0.6 floor, but 22% below baseline
+    fails = compare(
+        _with_shards(_doc(BASE), HEALTHY_SHARDS),
+        _with_shards(_doc(BASE), worse),
+        max_regression=0.15,
+    )
+    assert any("s8 efficiency regressed" in m for m in fails)
+
+
+def test_shard_gate_trips_on_disappearing_shard_rows():
+    base = _with_shards(_doc(BASE), HEALTHY_SHARDS)
+    # largest shard count gone -> dedicated failure
+    fewer = {s: m for s, m in HEALTHY_SHARDS.items() if s != 8}
+    fails = compare(base, _with_shards(_doc(BASE), fewer))
+    assert any("largest shard count s8 disappeared" in m for m in fails)
+    # all sharded rows gone -> dedicated failure
+    fails = compare(base, _doc(BASE))
+    assert any("baseline has sharded rows but the fresh run has none" in m
+               for m in fails)
+
+
+def test_any_baseline_row_disappearance_fails():
+    """Satellite bugfix: the gate must fail when ANY baseline row is
+    missing from the smoke run, not just batched_engine rows."""
+    base = _doc(BASE)
+    base["rows"].append(
+        {"name": "speedups/forum/hier_engine/L3", "us_per_call": 9.0,
+         "derived": "k=16-391;work=181436"}
+    )
+    fails = compare(base, _doc(BASE))
+    assert len(fails) == 1
+    assert "hier_engine/L3" in fails[0] and "disappeared" in fails[0]
+
+
+def test_step_summary_renders_and_appends(tmp_path):
+    base = _with_shards(_doc(BASE), HEALTHY_SHARDS)
+    bad = dict(HEALTHY_SHARDS)
+    bad[8] = (3.7, 0.46)
+    fresh = _with_shards(_doc(BASE), bad)
+    warnings: list = []
+    fails = compare(base, fresh, warnings=warnings)
+    out = tmp_path / "summary.md"
+    out.write_text("prior step content\n")
+    md = write_step_summary(base, fresh, fails, warnings, path=str(out))
+    assert "## Perf gate: ❌ FAILED" in md
+    assert "| `speedups/forum/batched_engine/n1000` |" in md
+    assert "| s8 |" in md and "0.80" in md and "0.46" in md
+    assert "**Failures:**" in md
+    assert any(line.startswith("- sharded_engine:") for line in md.splitlines())
+    # appended after the prior content, not truncated over it
+    text = out.read_text()
+    assert text.startswith("prior step content\n") and md in text
+    # healthy run renders the green banner (and without a path or
+    # $GITHUB_STEP_SUMMARY it only returns the markdown)
+    md_ok = write_step_summary(base, base, [], [])
+    assert "## Perf gate: ✅ passed" in md_ok
+
+
+def test_main_min_scaling_efficiency_flag(tmp_path):
+    base_p = tmp_path / "BENCH_baseline.json"
+    fresh_p = tmp_path / "BENCH_smoke.json"
+    base_p.write_text(json.dumps(_with_shards(_doc(BASE), HEALTHY_SHARDS)))
+    fresh_p.write_text(json.dumps(_with_shards(_doc(BASE), HEALTHY_SHARDS)))
+    assert main([str(fresh_p), "--baseline", str(base_p)]) == 0
+    # raising the floor above the measured 0.8 trips the gate from the CLI
+    assert main(
+        [str(fresh_p), "--baseline", str(base_p),
+         "--min-scaling-efficiency", "0.95"]
+    ) == 1
+
+
 def test_repo_baseline_is_committed_and_gateable():
     """The committed baseline must contain every batched_engine row the
     smoke suite produces (arity 2, 3, 5)."""
@@ -205,3 +344,13 @@ def test_repo_baseline_is_committed_and_gateable():
     ratios = engine_device_ratios(doc)
     assert set(ratios) == set(sp), sorted(ratios)
     assert all(r <= 1.0 for r in ratios.values()), ratios
+    # The sharded engine is baselined at every smoke shard count with its
+    # largest-count efficiency above the committed floor — the scaling
+    # gate judges real numbers, not a vacuous pass.
+    from benchmarks.compare import MIN_SCALING_EFFICIENCY
+
+    sh = sharded_metrics(doc)
+    assert set(sh) == {1, 2, 4, 8}, sorted(sh)
+    assert sh[8]["eff"] >= MIN_SCALING_EFFICIENCY, sh
+    aggs = [sh[s]["agg"] for s in sorted(sh)]
+    assert aggs == sorted(aggs), aggs  # monotone in the committed run too

@@ -1,0 +1,385 @@
+"""Mesh-sharded serving: per-shard DeviceIndex under shard_map.
+
+The exactness anchor of the whole PR: sharded counts AND member docs are
+bit-identical to the single-device fused path and to the host loop for
+shard counts {1, 2, 4, 8} (clamped to the visible device grid — the CI
+shard-matrix re-runs this file under 2 and 8 fake devices) across
+arities 1–5 and hierarchy depths L ∈ {1, 2, 3}, plus the partitioning /
+routing invariants and the ElasticMesh + StragglerMonitor failover path.
+"""
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # hypothesis, or fallback
+
+from repro.core.batched_query import batched_query, plan_segment_pairs
+from repro.core.cluster_index import build_cluster_index
+from repro.core.device_engine import (
+    device_counts,
+    lower_plan_sharded,
+    shard_mesh,
+    sharded_device_counts,
+    sharded_device_index,
+)
+from repro.core.hier_index import as_hier, shard_tops
+from repro.core.queries import ConjunctiveQueries
+from repro.core.reorder import cluster_ranges, reorder_permutation
+from repro.data.corpus import Corpus
+from repro.index.build import build_index, permute_docs
+from repro.kernels.intersect.ref import PAD
+
+
+def _shard_counts():
+    """{1, 2, 4, 8} clamped to the visible device grid."""
+    n = len(jax.devices())
+    return [s for s in (1, 2, 4, 8) if s <= n]
+
+
+def _random_setup(rng, n_docs, n_terms, k, mean_len=12):
+    doc_lens = rng.integers(1, 2 * mean_len, n_docs)
+    rows, ptr = [], [0]
+    for d in range(n_docs):
+        r = np.unique(rng.integers(0, n_terms, doc_lens[d]))
+        rows.append(r)
+        ptr.append(ptr[-1] + len(r))
+    corpus = Corpus(
+        doc_ptr=np.asarray(ptr, np.int64),
+        doc_terms=np.concatenate(rows).astype(np.int32),
+        n_terms=n_terms,
+    )
+    assign = rng.integers(0, k, n_docs)
+    assign[rng.integers(0, n_docs)] = k - 1
+    perm = reorder_permutation(assign, k)
+    ranges = cluster_ranges(assign, k)
+    index = build_index(corpus)
+    reordered = permute_docs(index, perm)
+    return index, build_cluster_index(reordered, ranges)
+
+
+def _random_ragged_queries(rng, n_q, n_terms, max_arity=5):
+    lists = []
+    for _ in range(n_q):
+        a = int(rng.integers(1, max_arity + 1))
+        t = rng.integers(0, n_terms, a).tolist()
+        if a >= 2 and rng.random() < 0.25:
+            t[1] = t[0]  # duplicate term: ∩ is idempotent
+        lists.append(t)
+    return ConjunctiveQueries.from_lists(lists)
+
+
+def _assert_sharded_matches_all(cidx, cq):
+    """host loop ≡ single-device fused ≡ sharded at every shard count."""
+    ptr, docs_host, _w = batched_query(cidx, cq)
+    counts_dev, docs_dev, _i = device_counts(cidx, cq, return_docs=True)
+    np.testing.assert_array_equal(counts_dev, np.diff(ptr))
+    last_info = None
+    for s in _shard_counts():
+        sidx = sharded_device_index(cidx, mesh=shard_mesh(s))
+        counts, docs, info = sharded_device_counts(
+            cidx, cq, sidx=sidx, return_docs=True
+        )
+        np.testing.assert_array_equal(counts, np.diff(ptr))
+        np.testing.assert_array_equal(counts, counts_dev)
+        np.testing.assert_array_equal(docs, docs_host)
+        np.testing.assert_array_equal(docs, docs_dev)
+        assert info["n_kernel_calls"] == 1.0
+        assert info["n_shards"] == float(s)
+        assert info["shards_touched"] <= s
+        last_info = info
+    return last_info
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_sharded_engine_equivalence_random_corpora(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    index, cidx = _random_setup(
+        rng,
+        data.draw(st.integers(50, 250)),
+        data.draw(st.integers(20, 200)),
+        data.draw(st.integers(1, 10)),
+    )
+    cq = _random_ragged_queries(rng, data.draw(st.integers(1, 30)), index.n_terms)
+    _assert_sharded_matches_all(cidx, cq)
+
+
+def test_sharded_engine_every_depth(small_corpus):
+    """L = 1 / 2 / 3 hierarchies: sharded ≡ single-device ≡ host at every
+    depth and every shard count (at L = 1 the single implicit top node
+    lands wholly on shard 0 and the others stay empty)."""
+    from repro.core.seclud import SecludPipeline
+    from repro.data.query_log import synth_query_log
+
+    log = synth_query_log(small_corpus, n_queries=150, seed=7, arity=(2, 3))
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    cq = log.as_conjunctive()[:60]
+    for levels in (1, 2, 3):
+        res = pipe.fit(small_corpus, k=8, algo="topdown", log=log, levels=levels)
+        _assert_sharded_matches_all(res.hier_index, cq)
+
+
+def test_sharded_engine_empty_and_absent_terms(rng):
+    index, cidx = _random_setup(rng, 150, 500, k=8)
+    df = np.diff(index.post_ptr)
+    empty = np.flatnonzero(df == 0)
+    alive = np.flatnonzero(df > 0)
+    cq = ConjunctiveQueries.from_lists(
+        [
+            [int(empty[0])],
+            [int(alive[0]), int(empty[0])],
+            [int(alive[0]), int(alive[1]), int(alive[2])],
+        ]
+    )
+    info = _assert_sharded_matches_all(cidx, cq)
+    assert info is not None
+    # empty batch / empty plan
+    for s in _shard_counts():
+        sidx = sharded_device_index(cidx, mesh=shard_mesh(s))
+        counts, docs, info = sharded_device_counts(
+            cidx, np.empty((0, 2), np.int64), sidx=sidx, return_docs=True
+        )
+        assert len(counts) == 0 and len(docs) == 0
+        assert info["shards_touched"] == 0.0
+        counts, _ = sharded_device_counts(
+            cidx, np.array([[int(empty[0]), int(empty[1])]]), sidx=sidx
+        )
+        assert counts.tolist() == [0]
+
+
+# ----------------------------------------------------------------------
+# Partitioning and routing invariants
+# ----------------------------------------------------------------------
+
+
+def test_shard_tops_partition_properties(rng):
+    index, cidx = _random_setup(rng, 400, 120, k=12)
+    hidx = as_hier(cidx)
+    k0 = len(hidx.top_ranges) - 1
+    docs = hidx.index.post_docs.astype(np.int64)
+    top_of_post = np.searchsorted(hidx.top_ranges, docs, side="right") - 1
+    mass = np.bincount(top_of_post, minlength=k0)
+    for s in (1, 2, 3, 5, 8, k0, k0 + 3):
+        bounds = shard_tops(hidx, s)
+        assert bounds.shape == (s + 1,)
+        assert bounds[0] == 0 and bounds[-1] == k0
+        assert (np.diff(bounds) >= 0).all()  # contiguous, no straddling
+        # every top node lands in exactly one shard; posting mass is
+        # conserved across the partition
+        per_shard = [
+            int(mass[bounds[i] : bounds[i + 1]].sum()) for i in range(s)
+        ]
+        assert sum(per_shard) == int(mass.sum())
+        if s > k0:
+            # more shards than top nodes: surplus shards come back empty
+            # (repeated boundaries) rather than splitting a node
+            assert int((np.diff(bounds) == 0).sum()) >= s - k0
+    with pytest.raises(ValueError):
+        shard_tops(hidx, 0)
+
+
+def test_shard_tops_balances_posting_mass(rng):
+    """With many equal-mass top nodes the partition is near-perfect."""
+    index, cidx = _random_setup(rng, 600, 80, k=24)
+    hidx = as_hier(cidx)
+    docs = hidx.index.post_docs.astype(np.int64)
+    k0 = len(hidx.top_ranges) - 1
+    mass = np.bincount(
+        np.searchsorted(hidx.top_ranges, docs, side="right") - 1, minlength=k0
+    )
+    bounds = shard_tops(hidx, 4)
+    per_shard = np.array(
+        [mass[bounds[i] : bounds[i + 1]].sum() for i in range(4)]
+    )
+    # quantile cuts: no shard exceeds its fair share by more than the
+    # single largest top node (the indivisible unit)
+    assert per_shard.max() <= mass.sum() / 4 + mass.max()
+
+
+def test_slice_top_shard_views_answer_locally(small_corpus, small_log):
+    """Each shard's host view (SecludResult.shard_slices) returns exactly
+    the full index's hits restricted to the shard's doc range."""
+    from repro.core.seclud import SecludPipeline
+
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    res = pipe.fit(small_corpus, k=8, algo="topdown", log=small_log, levels=3)
+    hidx = res.hier_index
+    cq = small_log.as_conjunctive()[:40]
+    ptr, docs, _w = batched_query(hidx, cq)
+    bounds, views = res.shard_slices(3)
+    doc_bounds = hidx.top_ranges[bounds]
+    got_all = []
+    for s, view in enumerate(views):
+        assert view.index is hidx.index  # shares postings, no copy
+        vptr, vdocs, _ = batched_query(view, cq)
+        lo, hi = int(doc_bounds[s]), int(doc_bounds[s + 1])
+        assert ((vdocs >= lo) & (vdocs < hi)).all()
+        got_all.append((vptr, vdocs))
+    # per-query union over shards == full index results
+    for q in range(cq.n_queries):
+        want = docs[ptr[q] : ptr[q + 1]]
+        got = np.concatenate(
+            [vdocs[vptr[q] : vptr[q + 1]] for vptr, vdocs in got_all]
+        )
+        np.testing.assert_array_equal(np.sort(got), np.sort(want))
+
+
+def test_sharded_lowered_plan_routing(rng):
+    """Groups route to the shard owning their docs; stacked rows carry
+    the dead-cell conventions the fold's masking relies on."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        pytest.skip("needs >= 2 devices for a multi-shard mesh")
+    s = min(4, n_dev)
+    index, cidx = _random_setup(rng, 300, 100, k=9)
+    cq = _random_ragged_queries(rng, 25, 100)
+    sidx = sharded_device_index(cidx, mesh=shard_mesh(s))
+    plan = plan_segment_pairs(as_hier(cidx), cq, track_work=False)
+    lowered = lower_plan_sharded(plan, sidx)
+    # every group's doc range sits inside its assigned shard's doc range
+    for g in range(plan.n_pairs):
+        sh = int(lowered.grp_shard[g])
+        assert sidx.doc_bounds[sh] <= plan.base[g] < sidx.doc_bounds[sh + 1]
+    # true-cell mass is conserved and group offsets tile each shard row
+    assert lowered.n_cells_true.sum() == int(
+        plan.seg_len[plan.seg_ptr[:-1]].sum()
+    )
+    for sh in range(s):
+        g_in = np.flatnonzero(lowered.grp_shard == sh)
+        assert lowered.grp_cnt[g_in].sum() == lowered.n_cells_true[sh]
+        # beyond the true cells, rows are dead: post -1, arity 0, query
+        # out of range (segment_sum drops them)
+        t = int(lowered.n_cells_true[sh])
+        assert (lowered.cells[sh, 0, t:] == -1).all()
+        assert (lowered.cells[sh, 3, t:] == 0).all()
+        assert (lowered.cells[sh, 2, t:] >= lowered.n_queries).all()
+
+
+def test_sharded_index_cached_per_mesh(rng):
+    index, cidx = _random_setup(rng, 120, 60, k=5)
+    mesh = shard_mesh(min(2, len(jax.devices())))
+    a = sharded_device_index(cidx, mesh=mesh)
+    b = sharded_device_index(cidx, mesh=mesh)
+    assert a is b
+    assert a.nbytes > 0
+    # the per-shard rows hold exactly the global postings, re-bucketed
+    stacked = np.asarray(a.post_docs)
+    live = stacked[stacked != PAD]
+    assert len(live) == len(cidx.index.post_docs)
+    np.testing.assert_array_equal(
+        np.sort(live), np.sort(cidx.index.post_docs)
+    )
+    # per-shard rows hold only docs inside the shard's doc range
+    for sh in range(a.n_shards):
+        row = stacked[sh, : int(a.shard_counts[sh])]
+        assert ((row >= a.doc_bounds[sh]) & (row < a.doc_bounds[sh + 1])).all()
+
+
+# ----------------------------------------------------------------------
+# Shard failover through the serving layer
+# ----------------------------------------------------------------------
+
+
+def _service(small_corpus, small_log):
+    from repro.core.seclud import SecludPipeline
+    from repro.serve.search_service import SearchService
+
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    res = pipe.fit(small_corpus, k=8, algo="topdown", log=small_log, levels=2)
+    return res, SearchService(res)
+
+
+def test_serve_counts_device_sharded_path(small_corpus, small_log):
+    res, svc = _service(small_corpus, small_log)
+    cq = small_log.as_conjunctive()[:40]
+    host, _ = svc.serve_counts(cq)
+    single, single_docs, _ = svc.serve_counts_device(cq, return_docs=True)
+    np.testing.assert_array_equal(single, host)
+    s = min(4, len(jax.devices()))
+    svc.enable_sharded(n_shards=s)
+    assert svc.n_shards == s
+    counts, docs, info = svc.serve_counts_device(cq, return_docs=True)
+    np.testing.assert_array_equal(counts, host)
+    np.testing.assert_array_equal(docs, single_docs)
+    assert info["n_shards"] == float(s)
+
+
+def test_shard_failover_rebalances_and_stays_exact(small_corpus, small_log):
+    """Evict one fake device through the monitor: the mesh shrinks, the
+    survivors absorb the evicted shard's top clusters, and results stay
+    bit-identical."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        pytest.skip("needs >= 2 devices to lose one")
+    res, svc = _service(small_corpus, small_log)
+    cq = small_log.as_conjunctive()[:40]
+    host, _ = svc.serve_counts(cq)
+
+    s = min(4, n_dev)
+    svc.enable_sharded(n_shards=s, strikes_to_evict=2)
+    before = svc.sharded_index
+    evict = s - 1  # the last shard: its top clusters must be re-owned
+    lost_tops = set(
+        range(
+            int(before.top_bounds[evict]), int(before.top_bounds[evict + 1])
+        )
+    )
+    lost_device = np.asarray(before.mesh.devices).reshape(-1)[evict]
+
+    times = np.ones(s)
+    times[evict] = 50.0  # persistently past the 1.5x-median deadline
+    verdicts, remeshed = svc.record_shard_times(times)
+    assert not remeshed and verdicts[evict].slow
+    verdicts, remeshed = svc.record_shard_times(times)
+    assert remeshed and verdicts[evict].evict
+    assert svc._elastic.epoch == 2  # enable_sharded meshed once already
+
+    after = svc.sharded_index
+    assert after.n_shards == s - 1
+    assert lost_device.id not in {
+        d.id for d in np.asarray(after.mesh.devices).reshape(-1)
+    }
+    # the new partition still covers every top cluster (the lost shard's
+    # clusters re-routed to the survivors) and the whole corpus
+    k0 = len(after.host.top_ranges) - 1
+    assert after.top_bounds[0] == 0 and after.top_bounds[-1] == k0
+    assert after.doc_bounds[-1] == after.host.index.n_docs
+    covered = set()
+    for sh in range(after.n_shards):
+        covered |= set(
+            range(int(after.top_bounds[sh]), int(after.top_bounds[sh + 1]))
+        )
+    assert lost_tops <= covered
+    # ... and serving stays bit-identical through the failover
+    counts, docs, info = svc.serve_counts_device(cq, return_docs=True)
+    np.testing.assert_array_equal(counts, host)
+    _c, docs_single, _i = device_counts(svc.query_index, cq, return_docs=True)
+    np.testing.assert_array_equal(docs, docs_single)
+    assert info["n_shards"] == float(s - 1)
+    # the fresh monitor watches the new, smaller world
+    assert svc._monitor.n_hosts == s - 1
+
+
+def test_record_shard_times_requires_enable(small_corpus, small_log):
+    _res, svc = _service(small_corpus, small_log)
+    with pytest.raises(RuntimeError):
+        svc.record_shard_times([1.0, 1.0])
+
+
+def test_elastic_mesh_exclude_device():
+    """Device-granular eviction: fake CPU devices all share process 0,
+    so exclude_host cannot shrink the pool — exclude_device must."""
+    from repro.dist.fault_tolerance import ElasticMesh
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        pytest.skip("needs >= 2 devices")
+    em = ElasticMesh(model_parallel=1)
+    mesh = em.remesh()
+    assert int(np.prod(tuple(mesh.shape.values()))) == n_dev
+    em.exclude_device(int(jax.devices()[0].id))
+    mesh2 = em.remesh()  # bare remesh reuses the remembered pool
+    assert int(np.prod(tuple(mesh2.shape.values()))) == n_dev - 1
+    ids = {d.id for d in np.asarray(mesh2.devices).reshape(-1)}
+    assert jax.devices()[0].id not in ids
+    assert em.epoch == 2
