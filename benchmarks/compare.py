@@ -200,7 +200,7 @@ def compare(
     fresh_sh = sharded_metrics(fresh)
     if fresh_sh:
         counts = sorted(fresh_sh)
-        for lo, hi in zip(counts, counts[1:]):
+        for lo, hi in zip(counts, counts[1:], strict=False):
             if fresh_sh[hi]["agg"] < fresh_sh[lo]["agg"]:
                 fails.append(
                     f"sharded_engine: aggregate throughput not monotone — "

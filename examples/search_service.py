@@ -164,7 +164,7 @@ print(
 # doc range — the partition a multi-machine deployment hands each box.
 bounds, views = res3.shard_slices(n_shards)
 busy_q = queries[int(np.argmax(counts3))]  # the batch's busiest query
-per_shard, _ = zip(*(v.query(*busy_q) for v in views))
+per_shard, _ = zip(*(v.query(*busy_q) for v in views), strict=True)
 full, _ = hier.query(*busy_q)
 assert np.array_equal(np.sort(np.concatenate(per_shard)), np.sort(full))
 print(f"shard views: top-cluster bounds {bounds.tolist()}, "

@@ -52,6 +52,7 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from repro.analysis.runtime import maybe_validate
 from repro.core.hier_index import _concat_ranges, as_hier
 from repro.core.queries import ConjunctiveQueries, as_queries
 from repro.index.batched import pow2_buckets
@@ -315,6 +316,51 @@ class SegmentPlan:
     def n_pairs(self) -> int:
         return len(self.pair_query)
 
+    def validate(self) -> None:
+        """Structural invariants of the plan (debug head: ``REPRO_DEBUG``).
+
+        Group arrays are parallel, ``seg_ptr`` is the CSR of ``arity``,
+        groups come out in the (query, cluster) emission order, every
+        segment is a sane slice, and each group's segments are
+        cost-ordered (nondecreasing length) — the chain-order premise of
+        both the host chain and the device fold.
+        """
+        g = self.n_pairs
+        for name in ("cluster", "base", "width", "arity"):
+            if len(getattr(self, name)) != g:
+                raise ValueError(f"SegmentPlan: {name} not parallel to pair_query")
+        if len(self.seg_ptr) != g + 1 or self.seg_ptr[0] != 0:
+            raise ValueError("SegmentPlan: seg_ptr must be a (G + 1,) CSR from 0")
+        if (np.diff(self.seg_ptr) != self.arity).any():
+            raise ValueError("SegmentPlan: seg_ptr increments must equal arity")
+        n_seg = int(self.seg_ptr[-1])
+        if len(self.seg_start) != n_seg or len(self.seg_len) != n_seg:
+            raise ValueError("SegmentPlan: segment arrays disagree with seg_ptr")
+        if g:
+            if int(self.arity.min()) < 1:
+                raise ValueError("SegmentPlan: every group needs >= 1 segment")
+            if ((self.pair_query < 0) | (self.pair_query >= self.n_queries)).any():
+                raise ValueError("SegmentPlan: pair_query outside [0, n_queries)")
+            if (np.diff(self.pair_query) < 0).any():
+                raise ValueError("SegmentPlan: groups must be query-ordered")
+            if (self.width < 0).any() or (self.base < 0).any():
+                raise ValueError("SegmentPlan: negative cluster base/width")
+            if int(self.arity.max()) > int(self.max_arity):
+                raise ValueError("SegmentPlan: max_arity below a group's arity")
+        if n_seg and ((self.seg_start < 0) | (self.seg_len < 0)).any():
+            raise ValueError("SegmentPlan: negative segment start/length")
+        if n_seg > 1:
+            starts = np.zeros(n_seg + 1, bool)
+            starts[self.seg_ptr] = True
+            ok = (np.diff(self.seg_len) >= 0) | starts[1:n_seg]
+            if not ok.all():
+                raise ValueError(
+                    "SegmentPlan: segments within a group must be "
+                    "cost-ordered (nondecreasing length)"
+                )
+        if len(self.cluster_work) != self.n_queries:
+            raise ValueError("SegmentPlan: cluster_work not (n_queries,)")
+
     # Rank-0 / rank-1 views — the historical (short, long) segment pair of
     # a 2-term batch; ``long_len`` is 0 for single-term groups.
 
@@ -423,9 +469,9 @@ def plan_segment_pairs(cidx, queries, track_work: bool = True) -> SegmentPlan:
     max_a = cq.max_arity
     nlev = len(hidx.levels)
     if n == 0:
-        return _empty_plan(nlev)
+        return maybe_validate(_empty_plan(nlev))
     if nlev == 0:
-        return _plan_flat_root(hidx, cq)
+        return maybe_validate(_plan_flat_root(hidx, cq))
 
     # Per-(slot, query) rows over the current level's CSR arrays.  At the
     # top level every row is a CONTIGUOUS slice of the level arrays, so
@@ -528,7 +574,7 @@ def plan_segment_pairs(cidx, queries, track_work: bool = True) -> SegmentPlan:
         new_row_start = np.zeros((max_a, n), np.int64)
         gi_parts = []
         off = 0
-        for r, (gm, gidx) in enumerate(zip(res_g, res_gi)):
+        for r, (gm, gidx) in enumerate(zip(res_g, res_gi, strict=True)):
             child_s = lev.seg_start[gidx]
             child_ln = lev.seg_end[gidx] - lev.seg_start[gidx]
             qa = np.flatnonzero(ar > r)
@@ -553,7 +599,7 @@ def plan_segment_pairs(cidx, queries, track_work: bool = True) -> SegmentPlan:
         flat_g = flat_pos = flat_st = flat_ln = np.zeros(0, np.int64)
     order2 = np.lexsort((flat_pos, flat_ln, flat_g))
     cluster = cur_vals.astype(np.int64)
-    return SegmentPlan(
+    plan = SegmentPlan(
         pair_query=group_query,
         cluster=cluster,
         base=lev.ranges[cluster],
@@ -567,6 +613,7 @@ def plan_segment_pairs(cidx, queries, track_work: bool = True) -> SegmentPlan:
         max_arity=max_a,
         level_work=tuple(level_work),
     )
+    return maybe_validate(plan)
 
 
 # ----------------------------------------------------------------------

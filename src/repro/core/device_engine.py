@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import maybe_validate
 from repro.core.batched_query import _ragged_gather, _ragged_indices
 from repro.core.hier_index import HierIndex, as_hier, shard_tops
 from repro.core.queries import as_queries
@@ -133,6 +134,74 @@ class DeviceIndex:
             )
         return total
 
+    def validate(self) -> None:
+        """Structural invariants the fused fold's exactness rests on
+        (debug head: ``REPRO_DEBUG`` via :mod:`repro.analysis.runtime`).
+
+        * ``post_ptr`` is a monotone CSR spanning the posting array;
+        * postings are strictly increasing inside every term segment —
+          the binary search (:func:`_search_segments`) is only exact on
+          sorted, duplicate-free segments;
+        * every level CSR is monotone with in-bounds nested segments;
+        * ``search_iters`` covers the longest posting list.
+        """
+        post_ptr = jax.device_get(self.post_ptr)
+        post_docs = jax.device_get(self.post_docs)
+        n_post = self.n_postings
+        if len(post_docs) != n_post:
+            raise ValueError("DeviceIndex: post_docs length != n_postings")
+        if post_ptr[0] != 0 or post_ptr[-1] != n_post:
+            raise ValueError("DeviceIndex: post_ptr must span [0, n_postings]")
+        if (np.diff(post_ptr) < 0).any():
+            raise ValueError("DeviceIndex: post_ptr must be nondecreasing")
+        if n_post and (
+            (post_docs < 0) | (post_docs >= self.n_docs)
+        ).any():
+            raise ValueError("DeviceIndex: posting doc ids outside [0, n_docs)")
+        if n_post > 1:
+            seg_start = np.zeros(n_post + 1, bool)
+            seg_start[post_ptr] = True
+            ok = (np.diff(post_docs) > 0) | seg_start[1:n_post]
+            if not ok.all():
+                raise ValueError(
+                    "DeviceIndex: postings must be strictly increasing "
+                    "within each term segment (binary-search invariant)"
+                )
+        lens = np.diff(post_ptr)
+        max_len = int(lens.max()) if len(lens) else 0
+        if self.search_iters < max(max_len.bit_length(), 1):
+            raise ValueError(
+                "DeviceIndex: search_iters below the longest posting "
+                "list's bit length — the fold would miss matches"
+            )
+        for i, lev in enumerate(self.levels):
+            cl_ptr = jax.device_get(lev.cl_ptr)
+            cl_ids = jax.device_get(lev.cl_ids)
+            seg_s = jax.device_get(lev.seg_start)
+            seg_e = jax.device_get(lev.seg_end)
+            ranges = jax.device_get(lev.ranges)
+            nnz = len(cl_ids)
+            if cl_ptr[0] != 0 or cl_ptr[-1] != nnz or (np.diff(cl_ptr) < 0).any():
+                raise ValueError(f"DeviceIndex: level {i} cl_ptr not a CSR")
+            if len(seg_s) != nnz or len(seg_e) != nnz:
+                raise ValueError(f"DeviceIndex: level {i} segment arity mismatch")
+            bound = (
+                len(jax.device_get(self.levels[i + 1].cl_ids))
+                if i + 1 < len(self.levels)
+                else n_post
+            )
+            if nnz and (
+                (seg_s > seg_e) | (seg_s < 0) | (seg_e > bound)
+            ).any():
+                raise ValueError(
+                    f"DeviceIndex: level {i} segments not nested in bounds"
+                )
+            if (np.diff(ranges) < 0).any():
+                raise ValueError(f"DeviceIndex: level {i} ranges not monotone")
+            k = len(ranges) - 1
+            if nnz and ((cl_ids < 0) | (cl_ids >= k)).any():
+                raise ValueError(f"DeviceIndex: level {i} node ids outside [0, k)")
+
 
 def device_index(cidx) -> DeviceIndex:
     """The cached :class:`DeviceIndex` of ``cidx`` (a ``HierIndex`` of any
@@ -165,6 +234,7 @@ def device_index(cidx) -> DeviceIndex:
         search_iters=max(max_len.bit_length(), 1),
         host=hidx,
     )
+    maybe_validate(di)  # REPRO_DEBUG: structural check before caching
     hidx._device_index = di  # plain attribute: HierIndex is a mutable dataclass
     return di
 
@@ -186,12 +256,12 @@ class LoweredPlan:
     array shape can be quantized for jit-cache reuse).  ``stage_seg``
     holds, per stage, each group's rank-s posting segment ``(start,
     len)`` (absolute into ``post_docs``; zeros for groups without one).
-    Tail cells (quantization) carry ``cell_post = -1``, ``arity = 0``
+    Tail cells (quantization) carry ``cell_post = PAD``, ``arity = 0``
     and ``cell_query >= n_queries`` so the fold masks them and
     ``segment_sum`` drops them.
     """
 
-    cells: np.ndarray  # (4, N) int32 rows: post index (-1 = pad), group
+    cells: np.ndarray  # (4, N) int32 rows: post index (PAD = pad), group
     #                    id, query id (>= n_queries = pad), arity (0 =
     #                    pad) — one upload for the whole batch
     stage_seg: np.ndarray  # (2, n_stages * group_width) int32 — per
@@ -234,7 +304,7 @@ def lower_plan(plan) -> LoweredPlan:
     n_cells = _quantize(n_true)
 
     cells = np.empty((4, n_cells), np.int32)
-    cells[0] = -1
+    cells[0] = PAD
     cells[1] = len(order)
     cells[2] = n_queries
     cells[3] = 0
@@ -345,7 +415,7 @@ def _fold_core(
         cells[0], cells[1], cells[2], cells[3],
     )
     cur = post_docs[jnp.clip(cell_post, 0, n - 1)]
-    cur = jnp.where(cell_post >= 0, cur, PAD)
+    cur = jnp.where(cell_post != PAD, cur, PAD)
     entering = []
     for s, iters in enumerate(stage_iters, start=1):
         seg = stage_seg[:, (s - 1) * group_width : s * group_width]
@@ -386,8 +456,8 @@ def device_fold(
     unless requested."""
     return _fused_fold(
         dindex.post_docs,
-        jnp.asarray(lowered.cells),
-        jnp.asarray(lowered.stage_seg),
+        jax.device_put(lowered.cells),
+        jax.device_put(lowered.stage_seg),
         group_width=lowered.group_width,
         stage_iters=lowered.stage_iters,
         n_queries_pad=lowered.n_queries_pad,
@@ -471,8 +541,8 @@ def device_counts(
     counts_d, entering_d, members_d = device_fold(
         dindex, lowered, return_members=return_docs
     )
-    counts = np.asarray(counts_d)[: lowered.n_queries].astype(np.int64)
-    entering = np.asarray(entering_d)
+    counts = jax.device_get(counts_d)[: lowered.n_queries].astype(np.int64)
+    entering = jax.device_get(entering_d)
 
     stages = _stage_info(lowered, entering)
     true_cells = float(lowered.n_cells_true)
@@ -492,7 +562,7 @@ def device_counts(
 
     # Un-permute the final cells to plan (query, cluster) order; dropping
     # PAD holes leaves exactly batched_query's doc array.
-    members = np.asarray(members_d)
+    members = jax.device_get(members_d)
     perm_start = np.concatenate([[0], np.cumsum(lowered.cell_counts)])[:-1]
     inv_order = np.empty(len(lowered.order), np.int64)
     inv_order[lowered.order] = np.arange(len(lowered.order))
@@ -568,6 +638,63 @@ class ShardedDeviceIndex:
         """Total resident bytes across the mesh (PAD tail included)."""
         return int(self.post_docs.nbytes)
 
+    def validate(self) -> None:
+        """Shard partition exactness (debug head: ``REPRO_DEBUG``).
+
+        The sharded fold is bit-identical to the single-device path only
+        if the (S, W) stacked postings are an exact partition: every
+        global posting sits at ``(shard_of(doc), local_pos)`` in its
+        owner's row, rows carry nothing else but PAD tail, and the
+        doc-range routing that ``lower_plan_sharded`` uses reproduces
+        the row assignment.
+        """
+        S = self.n_shards
+        if len(self.top_bounds) != S + 1 or len(self.doc_bounds) != S + 1:
+            raise ValueError("ShardedDeviceIndex: bounds must have S + 1 entries")
+        if (np.diff(self.top_bounds) < 0).any() or (
+            np.diff(self.doc_bounds) < 0
+        ).any():
+            raise ValueError("ShardedDeviceIndex: shard bounds not monotone")
+        docs = np.asarray(self.host.index.post_docs, np.int64)
+        n_post = len(docs)
+        if len(self.local_pos) != n_post:
+            raise ValueError("ShardedDeviceIndex: local_pos length mismatch")
+        if int(self.shard_counts.sum()) != n_post:
+            raise ValueError(
+                "ShardedDeviceIndex: shard_counts do not partition the postings"
+            )
+        stacked = jax.device_get(self.post_docs)
+        if stacked.shape != (S, self.post_width):
+            raise ValueError("ShardedDeviceIndex: stacked postings shape mismatch")
+        shard_of = np.clip(
+            np.searchsorted(self.doc_bounds, docs, side="right") - 1, 0, S - 1
+        )
+        if not np.array_equal(
+            np.bincount(shard_of, minlength=S).astype(np.int64),
+            self.shard_counts,
+        ):
+            raise ValueError(
+                "ShardedDeviceIndex: shard_counts disagree with doc-range routing"
+            )
+        live = np.zeros((S, self.post_width), bool)
+        if n_post:
+            if ((self.local_pos < 0) | (self.local_pos >= self.post_width)).any():
+                raise ValueError("ShardedDeviceIndex: local_pos outside its row")
+            if not (stacked[shard_of, self.local_pos] == docs).all():
+                raise ValueError(
+                    "ShardedDeviceIndex: a posting is not at its routed "
+                    "(shard, local) slot — partition is not exact"
+                )
+            live[shard_of, self.local_pos] = True
+            if int(live.sum()) != n_post:
+                raise ValueError(
+                    "ShardedDeviceIndex: local_pos collides within a shard"
+                )
+        if (stacked[~live] != PAD).any():
+            raise ValueError(
+                "ShardedDeviceIndex: non-PAD value outside the live partition"
+            )
+
 
 def sharded_device_index(
     cidx, mesh=None, n_shards: Optional[int] = None
@@ -624,6 +751,7 @@ def sharded_device_index(
         search_iters=max(max_len.bit_length(), 1),
         host=hidx,
     )
+    maybe_validate(sidx)  # REPRO_DEBUG: partition exactness before caching
     cache[mesh] = sidx
     return sidx
 
@@ -723,7 +851,7 @@ def lower_plan_sharded(plan, sidx: ShardedDeviceIndex) -> ShardedLoweredPlan:
     n_queries = plan.n_queries
 
     cells = np.empty((S, 4, n_cells), np.int32)
-    cells[:, 0] = -1
+    cells[:, 0] = PAD
     cells[:, 1] = width
     cells[:, 2] = n_queries
     cells[:, 3] = 0
@@ -881,12 +1009,21 @@ def sharded_device_counts(
         lowered.n_queries_pad,
         bool(return_docs),
     )
+    # Explicit per-batch upload, pre-placed shard-per-row so the jit
+    # never reshards (and never transfers implicitly).
+    from jax.sharding import NamedSharding
+
+    from repro.dist import sharding as sh
+
+    cells_spec, seg_spec = sh.plan_specs(sidx.mesh)
     out = fold(
         sidx.post_docs,
-        jnp.asarray(lowered.cells),
-        jnp.asarray(lowered.stage_seg),
+        jax.device_put(lowered.cells, NamedSharding(sidx.mesh, cells_spec)),
+        jax.device_put(
+            lowered.stage_seg, NamedSharding(sidx.mesh, seg_spec)
+        ),
     )
-    counts = np.asarray(out[0])[: lowered.n_queries].astype(np.int64)
+    counts = jax.device_get(out[0])[: lowered.n_queries].astype(np.int64)
     total_true = float(lowered.n_cells_true.sum())
     max_true = float(lowered.n_cells_true.max())
     info = {
@@ -908,7 +1045,7 @@ def sharded_device_counts(
     # sit contiguously inside its owning shard's row; gathering rows in
     # group order and dropping PAD holes restores exactly the
     # single-device (and host-loop) doc array.
-    members = np.asarray(out[2]).reshape(-1)
+    members = jax.device_get(out[2]).reshape(-1)
     starts = lowered.grp_shard * lowered.n_cells + lowered.grp_off
     orig_cells = _ragged_gather(members, starts, lowered.grp_cnt)
     docs = orig_cells[orig_cells != PAD].astype(np.int32)

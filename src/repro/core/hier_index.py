@@ -50,6 +50,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.runtime import maybe_validate
 from repro.index.build import InvertedIndex
 from repro.index.lookup import bucketize, cost_order, lookup_intersect
 
@@ -142,6 +143,78 @@ class HierIndex:
         if self.levels:
             return self.levels[0].ranges
         return np.array([0, self.index.n_docs], dtype=np.int64)
+
+    def validate(self) -> None:
+        """Structural invariants of the hierarchy (debug head:
+        ``REPRO_DEBUG`` via :mod:`repro.analysis.runtime`).
+
+        Every level's ranges are a monotone boundary array over [0, n]
+        nested in the next finer level; every level CSR is monotone with
+        sorted node ids per term and in-bounds child segments; postings
+        are strictly increasing within each term segment — the premise
+        of both the host chain and the device binary search.
+        """
+        n = self.index.n_docs
+        m = self.index.n_terms
+        post_ptr = np.asarray(self.index.post_ptr)
+        post_docs = np.asarray(self.index.post_docs)
+        n_post = len(post_docs)
+        if len(post_ptr) != m + 1 or post_ptr[0] != 0 or post_ptr[-1] != n_post:
+            raise ValueError("HierIndex: post_ptr must span [0, n_postings]")
+        if (np.diff(post_ptr) < 0).any():
+            raise ValueError("HierIndex: post_ptr must be nondecreasing")
+        if n_post > 1:
+            seg_start = np.zeros(n_post + 1, bool)
+            seg_start[post_ptr] = True
+            if not ((np.diff(post_docs) > 0) | seg_start[1:n_post]).all():
+                raise ValueError(
+                    "HierIndex: postings must be strictly increasing "
+                    "within each term segment"
+                )
+        ranges_list = [lev.ranges for lev in self.levels]
+        for r in ranges_list:
+            if len(r) < 2 or r[0] != 0 or r[-1] != n or (np.diff(r) < 0).any():
+                raise ValueError(
+                    "HierIndex: level ranges must be a nondecreasing "
+                    f"boundary array spanning [0, {n}]"
+                )
+        for coarse, fine in zip(ranges_list, ranges_list[1:], strict=False):
+            _check_nested(coarse, fine)
+        for i, lev in enumerate(self.levels):
+            nnz = len(lev.cl_ids)
+            if (
+                len(lev.cl_ptr) != m + 1
+                or lev.cl_ptr[0] != 0
+                or lev.cl_ptr[-1] != nnz
+                or (np.diff(lev.cl_ptr) < 0).any()
+            ):
+                raise ValueError(f"HierIndex: level {i} cl_ptr not a CSR over terms")
+            if len(lev.seg_start) != nnz or len(lev.seg_end) != nnz:
+                raise ValueError(f"HierIndex: level {i} segment arrays mismatch")
+            if nnz and ((lev.cl_ids < 0) | (lev.cl_ids >= lev.k)).any():
+                raise ValueError(f"HierIndex: level {i} node ids outside [0, k)")
+            if nnz > 1:
+                term_start = np.zeros(nnz + 1, bool)
+                term_start[lev.cl_ptr] = True
+                if not ((np.diff(lev.cl_ids) > 0) | term_start[1:nnz]).all():
+                    raise ValueError(
+                        f"HierIndex: level {i} node ids must be strictly "
+                        "increasing per term"
+                    )
+            bound = (
+                len(self.levels[i + 1].cl_ids)
+                if i + 1 < len(self.levels)
+                else n_post
+            )
+            if nnz and (
+                (lev.seg_start < 0)
+                | (lev.seg_start > lev.seg_end)
+                | (lev.seg_end > bound)
+            ).any():
+                raise ValueError(
+                    f"HierIndex: level {i} child segments out of bounds "
+                    "or inverted"
+                )
 
     def slice_top(self, top_lo: int, top_hi: int) -> "HierIndex":
         """The index restricted to top-level nodes ``[top_lo, top_hi)`` —
@@ -456,15 +529,17 @@ def build_hier_index(
                 "each level's ranges must be a nondecreasing boundary array "
                 f"spanning [0, {n}], got {r[:5]}..."
             )
-    for coarse, fine in zip(level_ranges, level_ranges[1:]):
+    for coarse, fine in zip(level_ranges, level_ranges[1:], strict=False):
         _check_nested(coarse, fine)
 
     if not level_ranges:
-        return HierIndex(
-            levels=(),
-            index=reordered_index,
-            bucket_size_clusters=bucket_size_clusters,
-            bucket_size_postings=bucket_size_postings,
+        return maybe_validate(
+            HierIndex(
+                levels=(),
+                index=reordered_index,
+                bucket_size_clusters=bucket_size_clusters,
+                bucket_size_postings=bucket_size_postings,
+            )
         )
 
     # Leaf level: RLE over (term, leaf cluster) pairs of the posting array.
@@ -508,11 +583,13 @@ def build_hier_index(
             ),
         )
         child_ranges = up_ranges
-    return HierIndex(
-        levels=tuple(levels),
-        index=reordered_index,
-        bucket_size_clusters=bucket_size_clusters,
-        bucket_size_postings=bucket_size_postings,
+    return maybe_validate(
+        HierIndex(
+            levels=tuple(levels),
+            index=reordered_index,
+            bucket_size_clusters=bucket_size_clusters,
+            bucket_size_postings=bucket_size_postings,
+        )
     )
 
 

@@ -103,8 +103,8 @@ def kmeans(
     counts = cluster_counts(view, assign, k)
     psi = psi_from_counts(counts, view.p_freq)
     history.append(psi)
-    it = 0
-    for it in range(1, max_iters + 1):
+    _it = 0
+    for _it in range(1, max_iters + 1):
         tables = delta_add_tables(counts, view.p_freq)
         scores = assignment_scores(view, tables)  # (n, k)
         new_assign = np.argmin(scores, axis=1)
@@ -119,7 +119,7 @@ def kmeans(
                 break
         else:
             break  # no improvement: keep previous assignment
-    return KMeansResult(assign=assign, psi=psi, n_iters=it, psi_history=history)
+    return KMeansResult(assign=assign, psi=psi, n_iters=_it, psi_history=history)
 
 
 def document_grained_pass(
@@ -153,8 +153,8 @@ def document_grained_pass(
     moves_since_refresh = 0
 
     indptr, indices, data = mat.indptr, mat.indices, mat.data
-    npass = 0
-    for npass in range(1, max_passes + 1):
+    _npass = 0
+    for _npass in range(1, max_passes + 1):
         moved = 0
         for d in rng.permutation(n):
             lo, hi = indptr[d], indptr[d + 1]
@@ -195,4 +195,4 @@ def document_grained_pass(
         moves_since_refresh = 0
         if moved == 0 or rel < min_rel_improvement:
             break
-    return KMeansResult(assign=assign, psi=psi, n_iters=npass, psi_history=history)
+    return KMeansResult(assign=assign, psi=psi, n_iters=_npass, psi_history=history)

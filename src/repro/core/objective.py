@@ -343,7 +343,7 @@ def hier_query_set_cost(
     leaf = _chain_cost(cnt_leaf[rows], cq.q_ptr, cq.arities, model)
     out["postings"] = leaf
     total = leaf
-    for li, (assign, kl) in enumerate(zip(level_assigns, level_ks)):
+    for li, (assign, kl) in enumerate(zip(level_assigns, level_ks, strict=True)):
         if li == len(level_assigns) - 1:
             cnt = cnt_leaf  # the leaf counts were just computed
         else:

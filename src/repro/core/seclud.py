@@ -103,7 +103,7 @@ class SecludResult:
         bounds = shard_tops(hidx, n_shards)
         views = [
             hidx.slice_top(int(lo), int(hi))
-            for lo, hi in zip(bounds[:-1], bounds[1:])
+            for lo, hi in zip(bounds[:-1], bounds[1:], strict=True)
         ]
         return bounds, views
 
@@ -287,7 +287,7 @@ class SecludPipeline:
             psi_from_counts(
                 cluster_counts(view, a, len(r) - 1), view.p_freq
             )
-            for a, r in zip(level_assigns, level_ranges)
+            for a, r in zip(level_assigns, level_ranges, strict=True)
         )
         # Upload the index once, now: every device batch (benchmarks,
         # SearchService, batched_counts) reuses this resident copy.

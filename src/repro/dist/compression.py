@@ -89,7 +89,7 @@ def compressed_psum_tree(
     # tuple nodes.
     leaves_g, treedef = jax.tree.flatten(grads)
     leaves_e = jax.tree.leaves(err)
-    pairs = [one(g, e) for g, e in zip(leaves_g, leaves_e)]
+    pairs = [one(g, e) for g, e in zip(leaves_g, leaves_e, strict=True)]
     out = jax.tree.unflatten(treedef, [p[0] for p in pairs])
     new_err = jax.tree.unflatten(treedef, [p[1] for p in pairs])
     return out, new_err

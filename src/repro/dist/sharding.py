@@ -144,7 +144,9 @@ def validate_spec(mesh, spec, shape) -> P:
     entries = entries + (None,) * (len(shape) - len(entries))
     out = []
     names = set(mesh.axis_names)
-    for dim, entry in zip(shape, entries):
+    # A PartitionSpec may legally be shorter than the array rank (the
+    # trailing dims are replicated), so this zip must not be strict.
+    for dim, entry in zip(shape, entries, strict=False):
         if entry is None:
             out.append(None)
             continue

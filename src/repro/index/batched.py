@@ -89,7 +89,7 @@ def batch_queries(
         ls = np.minimum(ls, max_list_len)
         ll = np.minimum(ll, max_list_len)
 
-    keys = list(zip(pow2_buckets(ls).tolist(), pow2_buckets(ll).tolist()))
+    keys = list(zip(pow2_buckets(ls).tolist(), pow2_buckets(ll).tolist(), strict=True))
     groups: Dict[Tuple[int, int], List[int]] = {}
     for i, k in enumerate(keys):
         groups.setdefault(k, []).append(i)

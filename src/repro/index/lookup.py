@@ -196,7 +196,7 @@ def adaptive_intersect(
     region_end = np.append(region_start[1:], len(a))
     probes = scanned = 0
     out = []
-    for rs, re_ in zip(region_start, region_end):
+    for rs, re_ in zip(region_start, region_end, strict=True):
         bu = int(bucket_of_a[rs])
         lo, hi = int(blong.dir_ptr[bu]), int(blong.dir_ptr[bu + 1])
         n_a, n_b = int(re_ - rs), hi - lo

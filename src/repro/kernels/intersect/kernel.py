@@ -148,7 +148,7 @@ def _members_count_kernel(short_ref, long_ref, out_ref, *, tile_l: int):
 
 
 def _members_call(kernel_body, out_dtype, out_cols):
-    def call(short, long, block_q, tile_s, tile_l, interpret):
+    def call(short, long, block_q: int, tile_s: int, tile_l: int, interpret: bool):
         b, ls = short.shape
         _, ll = long.shape
         assert b % block_q == 0 and ls % tile_s == 0 and ll % tile_l == 0

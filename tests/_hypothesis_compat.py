@@ -39,7 +39,7 @@ except ModuleNotFoundError:
         def draw(self, strategy, label=None):
             return strategy.example_from(self._rng)
 
-    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+    class strategies:  # mirrors the hypothesis module name
         @staticmethod
         def integers(min_value, max_value):
             return _Strategy(
@@ -75,7 +75,7 @@ except ModuleNotFoundError:
         def data():
             return _Strategy(lambda rng: _DataObject(rng))
 
-    class settings:  # noqa: N801
+    class settings:
         def __init__(self, max_examples=20, deadline=None, **_ignored):
             self.max_examples = max_examples
 

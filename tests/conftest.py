@@ -37,6 +37,33 @@ except ModuleNotFoundError:
     pass
 
 
+def pytest_report_header(config):
+    # Make sanitize-mode CI runs self-documenting: the header says
+    # whether the REPRO_DEBUG validation head is live for this run.
+    from repro.analysis.runtime import debug_enabled
+
+    state = "ON (validate() runs on every build)" if debug_enabled() else "off"
+    return f"repro: REPRO_DEBUG validation {state}"
+
+
+@pytest.fixture
+def repro_debug():
+    """Force the REPRO_DEBUG validation head on for one test."""
+    from repro.analysis.runtime import force_debug
+
+    with force_debug(True):
+        yield
+
+
+@pytest.fixture
+def transfer_guard():
+    """Run one test under the implicit host<->device transfer sanitizer."""
+    from repro.analysis.sanitize import no_implicit_transfers
+
+    with no_implicit_transfers():
+        yield
+
+
 @pytest.fixture(scope="session")
 def small_corpus():
     spec = CorpusSpec(

@@ -1,0 +1,67 @@
+"""seclint fixture: every per-file rule (SEC001–SEC003) must trip here.
+
+This file is a deliberately broken miniature of the real device engine —
+it is never imported, only parsed by ``tools/seclint.py --selftest`` and
+``tests/test_seclint.py``.  Its path suffix (``core/device_engine.py``)
+is what routes it into the device-path rule set.  Each violation below
+names the rule it exists to prove alive; if a rule stops tripping on
+this file, the selftest fails the build.
+"""
+
+import functools
+
+import jax
+import numpy as np
+
+# --- SEC001: host-device sync points inside traced code ---------------
+
+
+@jax.jit
+def bad_sync(x, y):
+    if x:  # SEC001: implicit bool() on a traced value
+        y = y + 1
+    n = int(x)  # SEC001: int() on a traced value
+    s = x.item()  # SEC001: .item() on a traced value
+    h = np.asarray(y)  # SEC001: implicit device->host transfer
+    return n + s + h
+
+
+# --- SEC002a: jit constructed inside a function body ------------------
+
+
+def fold_per_batch(cells):
+    # SEC002: a fresh jit per call — every batch retraces.
+    return jax.jit(lambda c: c + 1)(cells)
+
+
+# --- SEC002b: unhashable static arg default ---------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def bad_static(x, cfg=[]):  # SEC002: list default cannot key the cache
+    return x
+
+
+# --- SEC002c: dynamic shape leaking into the jit cache key ------------
+
+
+def _fold_core(cells, n_queries_pad):
+    return cells
+
+
+_fused_fold = functools.partial(jax.jit, static_argnames=("n_queries_pad",))(
+    _fold_core
+)
+
+
+def run_batch(cells, queries):
+    # SEC002: raw len() as a static arg — every batch size recompiles.
+    return _fused_fold(cells, n_queries_pad=len(queries))
+
+
+# --- SEC003: literal -1 sentinels on cell data ------------------------
+
+
+def lower(cells, cell_post):
+    cells[0] = -1  # SEC003: fill must use PAD
+    return cell_post == -1  # SEC003: comparison must use PAD

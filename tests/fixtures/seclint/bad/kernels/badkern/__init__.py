@@ -1,0 +1,3 @@
+"""seclint fixture: a kernel package violating the SEC004 contract —
+it ships only ``kernel.py``, with no ``ref.py`` oracle, no ``ops.py``
+wrapper, and no kernel≡ref test."""

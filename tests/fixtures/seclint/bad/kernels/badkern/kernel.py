@@ -1,0 +1,5 @@
+"""seclint fixture: SEC004 — a kernel with no ref oracle or ops wrapper."""
+
+
+def badkern_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]

@@ -31,7 +31,7 @@ def _recsys_batch(cfg, name, batch, rng):
             "target_id": rng.integers(0, cfg.vocab_per_field, (batch,)).astype(np.int32),
             "label": rng.integers(0, 2, (batch,)).astype(np.float32),
         }
-    seq = getattr(cfg, "seq_len", None) or getattr(cfg, "hist_len")
+    seq = getattr(cfg, "seq_len", None) or cfg.hist_len
     out = {
         "hist_ids": rng.integers(0, cfg.vocab if hasattr(cfg, "vocab") else 100, (batch, seq)).astype(np.int32),
         "hist_mask": np.ones((batch, seq), np.float32),

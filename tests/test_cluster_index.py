@@ -44,7 +44,7 @@ def test_cluster_index_segments_exact(setup):
         cl, s, e = cidx.term_segments(t)
         post = reordered.postings(t)
         assert (e - s).sum() == len(post)
-        for c, a, b in zip(cl, s, e):
+        for c, a, b in zip(cl, s, e, strict=True):
             seg = reordered.post_docs[a:b]
             assert np.all(seg >= ranges[c]) and np.all(seg < ranges[c + 1])
 

@@ -183,9 +183,9 @@ def test_lower_plan_layout(rng):
         assert (sorted_arity[:n_g] > stage).all()
         if n_g < len(sorted_arity):
             assert (sorted_arity[n_g:] <= stage).all()
-    # tail cells are dead: post -1, group == G, query >= n_queries, arity 0
+    # tail cells are dead: post PAD, group == G, query >= n_queries, arity 0
     n_true = lowered.n_cells_true
-    assert (lowered.cells[0, n_true:] == -1).all()
+    assert (lowered.cells[0, n_true:] == PAD).all()
     assert (lowered.cells[1, n_true:] == len(lowered.order)).all()
     assert (lowered.cells[2, n_true:] >= lowered.n_queries).all()
     assert (lowered.cells[3, n_true:] == 0).all()

@@ -34,7 +34,7 @@ for kv_quant, window, tol in CASES:
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 sh.set_mesh(mesh)
 for (kv_quant, window, tol), cfg, ref, seq, params in zip(
-    CASES, cfgs, refs, seqs, params_list
+    CASES, cfgs, refs, seqs, params_list, strict=True
 ):
     cspecs = sh.cache_specs(jax.eval_shape(lambda: T.init_cache(cfg, 4, 16)), mesh)
     c1 = T.init_cache(cfg, 4, 16)

@@ -238,13 +238,13 @@ def test_fit_levels_nested_ranges_and_psi(small_corpus, small_log):
     assert res.levels == 4 and res.hier_index.depth == 4
     assert len(res.level_ranges) == 3 == len(res.psi_levels)
     # nesting: every coarser boundary is a boundary of the next finer level
-    for coarse, fine in zip(res.level_ranges, res.level_ranges[1:]):
+    for coarse, fine in zip(res.level_ranges, res.level_ranges[1:], strict=False):
         assert np.isin(coarse, fine).all()
     assert np.array_equal(res.level_ranges[-1], res.ranges)
     # coarser levels can only merge lists -> ψ never decreases going up
     assert res.psi_levels[-1] == res.psi
     assert all(
-        a >= b - 1e-9 for a, b in zip(res.psi_levels, res.psi_levels[1:])
+        a >= b - 1e-9 for a, b in zip(res.psi_levels, res.psi_levels[1:], strict=False)
     )
     # leaf assignment is consistent with the nested reorder
     assert np.array_equal(

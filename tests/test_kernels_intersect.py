@@ -29,7 +29,7 @@ def _make_batch(rng, b, ls, ll, universe, skew=False):
 
 def _brute(short, long):
     out = []
-    for s, l in zip(short, long):
+    for s, l in zip(short, long, strict=True):
         out.append(
             len(np.intersect1d(s[s != int(PAD)], l[l != int(PAD)]))
         )

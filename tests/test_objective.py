@@ -45,7 +45,8 @@ def _brute_remove_table(counts, p):
 
 
 @pytest.fixture(scope="module")
-def tiny(rng=np.random.default_rng(5)):
+def tiny():
+    rng = np.random.default_rng(5)
     counts = rng.integers(0, 6, size=(3, 12))
     p = rng.random(12)
     p /= p.sum()

@@ -1,0 +1,156 @@
+"""Runtime sanitizers: the warm device paths must run without implicit
+host<->device transfers, and the quantized-shape grid must bound the
+fused fold's compiled-executable count."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (
+    ImplicitTransferError,
+    jit_cache_size,
+    no_implicit_transfers,
+)
+from repro.core.batched_query import batched_query
+from repro.core.cluster_index import build_cluster_index
+from repro.core.device_engine import _fused_fold, _quantize, device_counts, device_index
+from repro.core.queries import ConjunctiveQueries
+from repro.core.reorder import cluster_ranges, reorder_permutation
+from repro.data.corpus import Corpus
+from repro.index.build import build_index, permute_docs
+
+
+@pytest.fixture(scope="module")
+def cidx():
+    rng = np.random.default_rng(42)
+    n_docs, n_terms, k = 220, 90, 6
+    rows, ptr = [], [0]
+    for _ in range(n_docs):
+        r = np.unique(rng.integers(0, n_terms, 18))
+        rows.append(r)
+        ptr.append(ptr[-1] + len(r))
+    corpus = Corpus(
+        doc_ptr=np.asarray(ptr, np.int64),
+        doc_terms=np.concatenate(rows).astype(np.int32),
+        n_terms=n_terms,
+    )
+    assign = rng.integers(0, k, n_docs)
+    perm = reorder_permutation(assign, k)
+    ranges = cluster_ranges(assign, k)
+    reordered = permute_docs(build_index(corpus), perm)
+    return build_cluster_index(reordered, ranges)
+
+
+def _queries(rng, n_q, n_terms, max_arity=4):
+    lists = [
+        rng.integers(0, n_terms, int(rng.integers(1, max_arity + 1))).tolist()
+        for _ in range(n_q)
+    ]
+    return ConjunctiveQueries.from_lists(lists)
+
+
+def test_guard_catches_implicit_transfers():
+    x = jax.device_put(np.arange(8, dtype=np.int32))
+    h = np.arange(8, dtype=np.int32)
+    with no_implicit_transfers():
+        with pytest.raises(ImplicitTransferError):
+            np.asarray(x)  # implicit device->host
+        with pytest.raises(ImplicitTransferError):
+            jax.numpy.asarray(h)  # implicit host->device
+        # explicit transfers stay legal
+        back = jax.device_get(x)
+        np.testing.assert_array_equal(back, np.arange(8))
+        _ = jax.device_put(back)
+    # outside the guard everything is back to normal
+    np.testing.assert_array_equal(np.asarray(x), np.arange(8))
+
+
+def test_guard_restores_on_exception():
+    before = (np.asarray, jax.numpy.asarray, jax.device_get, jax.device_put)
+    with pytest.raises(RuntimeError, match="boom"):
+        with no_implicit_transfers():
+            raise RuntimeError("boom")
+    assert (np.asarray, jax.numpy.asarray, jax.device_get, jax.device_put) == before
+
+
+def test_warm_device_counts_has_no_implicit_transfers(cidx):
+    rng = np.random.default_rng(3)
+    cq = _queries(rng, 24, cidx.index.n_terms)
+    counts_ref, _ = device_counts(cidx, cq)  # warm: upload + compile
+    with no_implicit_transfers():
+        counts, info = device_counts(cidx, cq)
+        counts2, docs, _ = device_counts(cidx, cq, return_docs=True)
+    np.testing.assert_array_equal(counts, counts_ref)
+    np.testing.assert_array_equal(counts2, counts_ref)
+    assert info["n_kernel_calls"] == 1.0
+    # cross-check against the host loop (outside the guard)
+    ptr, docs_ref, _w = batched_query(cidx, cq)
+    np.testing.assert_array_equal(counts, np.diff(ptr))
+    np.testing.assert_array_equal(docs, docs_ref)
+
+
+def test_warm_search_service_device_path_is_clean(cidx):
+    from repro.serve.search_service import SearchService
+
+    class _Res:
+        cluster_index = cidx
+
+    _Res.cluster_index = cidx
+    svc = SearchService(_Res())
+    rng = np.random.default_rng(9)
+    cq = _queries(rng, 16, cidx.index.n_terms)
+    ref, _ = svc.serve_counts_device(cq)  # warm
+    with no_implicit_transfers():
+        counts, _info = svc.serve_counts_device(cq)
+    np.testing.assert_array_equal(counts, ref)
+
+
+def test_warm_sharded_counts_has_no_implicit_transfers(cidx):
+    from repro.core.device_engine import (
+        shard_mesh,
+        sharded_device_counts,
+        sharded_device_index,
+    )
+
+    rng = np.random.default_rng(5)
+    cq = _queries(rng, 20, cidx.index.n_terms)
+    sidx = sharded_device_index(cidx, mesh=shard_mesh(4))
+    ref, _ = sharded_device_counts(cidx, cq, sidx=sidx)  # warm
+    with no_implicit_transfers():
+        counts, info = sharded_device_counts(cidx, cq, sidx=sidx)
+        counts2, docs, _ = sharded_device_counts(
+            cidx, cq, sidx=sidx, return_docs=True
+        )
+    np.testing.assert_array_equal(counts, ref)
+    np.testing.assert_array_equal(counts2, ref)
+    assert info["n_shards"] == 4.0
+
+
+def test_quantized_grid_bounds_compile_count(cidx):
+    """N batches of drifting sizes must compile at most as many
+    executables as there are distinct quantized shape keys — the whole
+    point of _quantize as the jit cache key."""
+    rng = np.random.default_rng(7)
+    n_terms = cidx.index.n_terms
+    device_index(cidx)  # upload once
+    before = jit_cache_size(_fused_fold)
+    sizes = [20, 21, 22, 23, 24, 25, 26, 27]  # drifting batch sizes
+    batches = [_queries(rng, n, n_terms, max_arity=3) for n in sizes]
+    for n_q, cq in zip(sizes, batches, strict=True):
+        counts, _ = device_counts(cidx, cq)
+        assert len(counts) == n_q
+    grown = jit_cache_size(_fused_fold) - before
+    # The cache key is the *quantized* shape tuple, so drifting sizes
+    # must share executables: strictly fewer compiles than batches.
+    assert 0 < grown < len(sizes)
+    # And the key is a pure function of the quantized shapes: replaying
+    # every batch compiles nothing new.
+    for cq in batches:
+        device_counts(cidx, cq)
+    assert jit_cache_size(_fused_fold) - before == grown
+
+
+def test_quantize_is_monotone_padding():
+    for n in (1, 5, 8, 100, 1000, 12345):
+        q = _quantize(n)
+        assert q >= n and q % 8 == 0

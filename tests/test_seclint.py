@@ -1,0 +1,140 @@
+"""seclint: every rule must trip on its committed fixture, and the real
+source tree must be clean.  The fixtures are the linter's regression
+suite — a rule that stops firing on them has silently died."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import (
+    RULES,
+    check_kernel_contracts,
+    lint_paths,
+    lint_source,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "seclint" / "bad"
+SRC = REPO / "src"
+
+
+def _rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def test_fixture_trips_every_rule():
+    findings = lint_paths([FIXTURES], tests_dir=None)
+    assert _rules_of(findings) == set(RULES), (
+        "each SEC rule must fire on the bad fixture tree; "
+        f"got {sorted(_rules_of(findings))}"
+    )
+
+
+def test_src_tree_is_clean():
+    findings = lint_paths([SRC], tests_dir=REPO / "tests")
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_sec001_host_sync_in_traced_code():
+    src = (FIXTURES / "core" / "device_engine.py").read_text()
+    f = [x for x in lint_source(src, "pkg/core/device_engine.py") if x.rule == "SEC001"]
+    assert len(f) >= 4  # if-branch, int(), .item(), np.asarray
+    msgs = " ".join(x.message for x in f)
+    assert ".item()" in msgs and "np.asarray" in msgs
+
+
+def test_sec001_static_shape_reads_are_exempt():
+    src = """\
+import jax
+
+@jax.jit
+def f(x):
+    if x.ndim == 2:          # static under trace: fine
+        n = x.shape[0]       # static: fine
+    return x * n
+"""
+    assert lint_source(src, "pkg/core/device_engine.py") == []
+
+
+def test_sec001_scalar_annotations_are_exempt():
+    src = """\
+import jax
+
+@jax.jit
+def f(x, n: int, w: int | None = None):
+    if n > 3 and w is not None:
+        return x + w
+    return x
+"""
+    assert lint_source(src, "pkg/core/device_engine.py") == []
+
+
+def test_sec002_recompilation_hazards():
+    src = (FIXTURES / "core" / "device_engine.py").read_text()
+    f = [x for x in lint_source(src, "pkg/core/device_engine.py") if x.rule == "SEC002"]
+    msgs = " ".join(x.message for x in f)
+    assert "immediately-invoked" in msgs
+    assert "unhashable" in msgs
+    assert len(f) >= 3
+
+
+def test_sec002_partial_binding_is_not_flagged():
+    # partial(jax.jit, ...)(f) at module level is jit *construction*, the
+    # idiom the engine itself uses — it must not read as an invocation.
+    src = """\
+import functools, jax
+
+def _core(cells, n_queries_pad):
+    return cells[:n_queries_pad]
+
+_fused = functools.partial(jax.jit, static_argnames=("n_queries_pad",))(_core)
+"""
+    assert lint_source(src, "pkg/core/device_engine.py") == []
+
+
+def test_sec003_literal_sentinels():
+    src = (FIXTURES / "core" / "device_engine.py").read_text()
+    f = [x for x in lint_source(src, "pkg/core/device_engine.py") if x.rule == "SEC003"]
+    assert len(f) >= 2  # the fill and the comparison
+
+
+def test_sec003_only_in_device_data_paths():
+    # The rule is scoped to the engine's data-path modules; -1 in, say,
+    # the data loaders is ordinary arithmetic and must not be flagged.
+    src = "def f(offset):\n    return offset == -1\n"
+    assert lint_source(src, "pkg/data/corpus.py") == []
+
+
+def test_sec004_kernel_contract():
+    f = check_kernel_contracts(FIXTURES / "kernels", tests_dir=None)
+    assert {x.rule for x in f} == {"SEC004"}
+    msgs = " ".join(x.message for x in f)
+    assert "ref.py" in msgs and "ops.py" in msgs
+
+
+def test_sec004_real_kernels_are_complete():
+    f = check_kernel_contracts(SRC / "repro" / "kernels", tests_dir=REPO / "tests")
+    assert f == [], "\n".join(str(f_) for f_ in f)
+
+
+def test_cli_selftest_and_exit_codes():
+    tool = REPO / "tools" / "seclint.py"
+    r = subprocess.run(
+        [sys.executable, str(tool), "--selftest"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "selftest: OK" in r.stdout
+    # linting the bad fixtures directly must fail with findings (exit 1)
+    r = subprocess.run(
+        [sys.executable, str(tool), str(FIXTURES), "--tests-dir", ""],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert r.returncode == 1
+    assert "SEC00" in r.stdout
+    # and the real tree must pass (exit 0)
+    r = subprocess.run(
+        [sys.executable, str(tool), "src"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -83,7 +83,10 @@ def _assert_sharded_matches_all(cidx, cq):
         np.testing.assert_array_equal(counts, counts_dev)
         np.testing.assert_array_equal(docs, docs_host)
         np.testing.assert_array_equal(docs, docs_dev)
-        assert info["n_kernel_calls"] == 1.0
+        # A random corpus can produce an all-empty plan (no query's terms
+        # co-occur in any leaf cluster): that is the 0-dispatch fast path,
+        # not a missing kernel call.
+        assert info["n_kernel_calls"] == (1.0 if info["n_pairs"] else 0.0)
         assert info["n_shards"] == float(s)
         assert info["shards_touched"] <= s
         last_info = info
@@ -247,10 +250,10 @@ def test_sharded_lowered_plan_routing(rng):
     for sh in range(s):
         g_in = np.flatnonzero(lowered.grp_shard == sh)
         assert lowered.grp_cnt[g_in].sum() == lowered.n_cells_true[sh]
-        # beyond the true cells, rows are dead: post -1, arity 0, query
+        # beyond the true cells, rows are dead: post PAD, arity 0, query
         # out of range (segment_sum drops them)
         t = int(lowered.n_cells_true[sh])
-        assert (lowered.cells[sh, 0, t:] == -1).all()
+        assert (lowered.cells[sh, 0, t:] == PAD).all()
         assert (lowered.cells[sh, 3, t:] == 0).all()
         assert (lowered.cells[sh, 2, t:] >= lowered.n_queries).all()
 

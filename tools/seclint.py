@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""seclint CLI — run the repo's static invariant rules (SEC001–SEC004).
+
+Usage:
+    python tools/seclint.py                # lint src/ (the default)
+    python tools/seclint.py src tests      # lint explicit trees
+    python tools/seclint.py --selftest     # prove every rule trips on
+                                           # the committed bad fixtures
+    python tools/seclint.py --list-rules
+
+Exit status: 0 when no findings, 1 otherwise.  The engine lives in
+``repro.analysis.lint``; this wrapper only resolves paths and formats
+output, and bootstraps ``src/`` onto ``sys.path`` so it runs from a
+plain checkout without installation (and without jax — the lint rules
+are stdlib-ast only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import lint  # noqa: E402
+
+FIXTURES = REPO_ROOT / "tests" / "fixtures" / "seclint" / "bad"
+
+
+def _default_tests_dir(paths) -> Path | None:
+    """The tests/ directory enabling SEC004's kernel≡ref test check:
+    sibling of the first scanned tree's repo root, else the CWD's."""
+    candidates = [REPO_ROOT / "tests", Path.cwd() / "tests"]
+    for p in paths:
+        candidates.append(Path(p).resolve().parent / "tests")
+    for c in candidates:
+        if c.is_dir():
+            return c
+    return None
+
+
+def selftest() -> int:
+    """Every rule must trip on its committed fixture — the proof the
+    rules are alive — and src/ must be clean."""
+    if not FIXTURES.is_dir():
+        print(f"selftest: fixture tree missing: {FIXTURES}", file=sys.stderr)
+        return 1
+    findings = lint.lint_paths([FIXTURES], tests_dir=None)
+    tripped = {f.rule for f in findings}
+    expected = set(lint.RULES)
+    ok = True
+    for rule in sorted(expected):
+        n = sum(1 for f in findings if f.rule == rule)
+        status = "TRIP" if rule in tripped else "MISS"
+        print(f"  {rule}: {status} ({n} finding{'s' if n != 1 else ''})")
+        if rule not in tripped:
+            ok = False
+    if not ok:
+        print("selftest: FAILED — a rule no longer trips on its fixture")
+        for f in findings:
+            print(f"  {f}")
+        return 1
+    src_findings = lint.lint_paths(
+        [REPO_ROOT / "src"], tests_dir=REPO_ROOT / "tests"
+    )
+    if src_findings:
+        print("selftest: FAILED — src/ must be finding-free:")
+        for f in src_findings:
+            print(f"  {f}")
+        return 1
+    print(
+        f"selftest: OK — all {len(expected)} rules trip on fixtures "
+        f"({len(findings)} findings), src/ clean"
+    )
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="seclint", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files or trees to lint (default: the repo's src/)",
+    )
+    ap.add_argument(
+        "--tests-dir",
+        type=Path,
+        default=None,
+        help="tests directory for the SEC004 kernel-test check "
+        "(auto-detected; pass an empty string to disable)",
+    )
+    ap.add_argument(
+        "--selftest",
+        action="store_true",
+        help="lint the bad fixtures and require every rule to trip",
+    )
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(lint.RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+    if args.selftest:
+        return selftest()
+
+    paths = [Path(p) for p in args.paths] or [REPO_ROOT / "src"]
+    for p in paths:
+        if not p.exists():
+            print(f"seclint: no such path: {p}", file=sys.stderr)
+            return 2
+    tests_dir = args.tests_dir
+    if tests_dir is None:
+        tests_dir = _default_tests_dir(paths)
+    elif str(tests_dir) == "":
+        tests_dir = None
+
+    findings = lint.lint_paths(paths, tests_dir=tests_dir)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"seclint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
