@@ -1,0 +1,151 @@
+"""Serving-latency benchmark: open-loop Zipf replay through the deadline
+batcher.
+
+Rows (gated by ``benchmarks.compare``):
+
+  serving/forum/replay/r{qps} — sealed-mode replay of a mixed-arity
+  Zipf query log at target QPS.  ``us_per_call`` is the p50 request
+  latency; ``derived`` carries sustained QPS, p50/p99/p999 ms, mean
+  batch size / occupancy, the batch-size histogram, steady-state
+  compile count (must stay 0 after the shape-grid prewarm — asserted
+  here, gated in compare), and the prewarm's key/compile counts.
+
+Standalone (the CI ``serving`` job):
+
+  PYTHONPATH=src python -m benchmarks.bench_serving --smoke
+
+writes a serving-only JSON in the same schema as ``benchmarks.run
+--smoke``; the suite is also part of the combined smoke run.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _service(quick: bool):
+    from benchmarks.common import corpus_and_log
+    from repro.core.seclud import SecludPipeline
+    from repro.serve.search_service import SearchService
+
+    n_docs = 8000 if quick else 24000
+    corpus, log = corpus_and_log("forum", n_docs)
+    pipe = SecludPipeline(tc=2000 if quick else 6000, doc_grained_below=512)
+    res = pipe.fit(corpus, k=64, algo="topdown", log=log)
+    return corpus, SearchService(res)
+
+
+def run(quick: bool = True):
+    from repro.core.device_engine import prewarm
+    from repro.data.query_log import synth_query_log
+    from repro.serve.loop import ServeConfig, plan_batches
+    from repro.serve.replay import replay
+
+    corpus, svc = _service(quick)
+    cfg = ServeConfig(max_batch=64, deadline_s=0.002)
+    n_queries = 600 if quick else 3000
+    for qps in (500, 2000) if quick else (500, 2000, 8000):
+        log = synth_query_log(
+            corpus,
+            n_queries=n_queries,
+            co_topic=0.6,
+            seed=17,
+            arity=(1, 2, 3),
+            arity_weights=(0.2, 0.6, 0.2),
+            arrival_qps=float(qps),
+        )
+        cq = log.as_conjunctive()
+        # Startup: compile the exact shape grid this trace will dispatch.
+        batches = plan_batches(log.arrivals, cfg.max_batch, cfg.deadline_s)
+        t0 = time.perf_counter()
+        pw = prewarm(
+            svc.query_index, cq, batches=batches, dindex=svc.device_index
+        )
+        prewarm_s = time.perf_counter() - t0
+        rep = replay(svc, log, config=cfg, mode="sealed")
+        # The acceptance bar, enforced where the numbers are made:
+        # prewarmed steady-state serving never compiles, and batching
+        # never changes results.
+        assert rep.jit_compiles == 0, (
+            f"steady state compiled {rep.jit_compiles}x after prewarm"
+        )
+        direct, _ = svc.serve_counts_device(cq)
+        assert np.array_equal(rep.counts, direct), "replay counts diverged"
+        s = rep.summary()
+        hist = "/".join(
+            f"{k}:{v}" for k, v in sorted(s["batch_hist"].items())
+        )
+        yield row(
+            f"serving/forum/replay/r{qps}",
+            s["p50_ms"] / 1e3,
+            f"qps_offered={qps};qps_sustained={s['qps_sustained']:.1f};"
+            f"p50_ms={s['p50_ms']:.3f};p99_ms={s['p99_ms']:.3f};"
+            f"p999_ms={s['p999_ms']:.3f};mean_batch={s['mean_batch']:.1f};"
+            f"occupancy={s['occupancy']:.3f};batches={s['n_batches']};"
+            f"compiles_steady={rep.jit_compiles};"
+            f"prewarm_keys={pw['n_keys']};prewarm_compiles={pw['n_compiles']};"
+            f"prewarm_s={prewarm_s:.2f};n={n_queries};hist={hist}",
+        )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="quick sizes; write a serving-only JSON artifact for CI",
+    )
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    print("name,us_per_call,derived")
+    rows = []
+    errors = []
+    t0 = time.time()
+    try:
+        for r in run(quick=quick):
+            print(r, flush=True)
+            rows.append(r)
+    except Exception as e:  # pragma: no cover
+        print(f"serving/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        errors.append({"suite": "serving", "error": f"{type(e).__name__}: {e}"})
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s", file=sys.stderr)
+
+    if args.smoke:
+        parsed = []
+        for r in rows:
+            parts = str(r).split(",", 2)
+            parsed.append(
+                {
+                    "name": parts[0],
+                    "us_per_call": float(parts[1]),
+                    "derived": parts[2] if len(parts) > 2 else "",
+                }
+            )
+        with open(args.out, "w") as f:
+            json.dump(
+                {
+                    "suites": ["serving"],
+                    "quick": quick,
+                    "total_seconds": round(total_s, 2),
+                    "rows": parsed,
+                    "errors": errors,
+                },
+                f,
+                indent=2,
+            )
+        print(f"# wrote {args.out} ({len(parsed)} rows)", file=sys.stderr)
+        if errors:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,9 +33,24 @@ engine's 22x win.  This gate fails the benchmark job when
     largest shard count must stay above the committed
     ``--min-scaling-efficiency`` floor, and that efficiency must not
     drop more than ``--max-regression`` below the baseline's;
+  * a ``serving/*`` row's latency SLO regresses: p99 latency must not
+    grow, and sustained QPS must not drop, more than
+    ``--max-serving-regression`` (defaults to ``--max-regression``)
+    versus the baseline — these are absolute measurements, so like
+    wall-clock they need a loose tolerance when the baseline hardware
+    differs from the judge — and the steady-state compile count
+    (``compiles_steady=``, machine-independent: the shape-grid prewarm
+    either covers the replay or it doesn't) must not exceed the
+    baseline's (committed baselines carry 0);
   * ANY row present in the baseline disappeared (a benchmark silently
     dropped is a hole in the trajectory, not a pass);
   * the fresh run recorded suite errors.
+
+``--only-prefix serving/`` restricts both documents to rows under a
+prefix before gating — how the standalone CI ``serving`` job judges its
+serving-only artifact against the combined baseline without tripping
+the row-disappearance check for suites it never ran (the wall-clock
+check is skipped: a subset's total is not comparable).
 
 Rows present in the fresh run but absent from the baseline are
 TOLERATED with a warning (never a failure): a PR adding benchmarks must
@@ -67,6 +82,10 @@ _DEVICE_S_RE = re.compile(r"device_s=([0-9.]+)")
 _SHARD_ROW_RE = re.compile(r"/sharded_engine/s(\d+)$")
 _AGG_RE = re.compile(r"agg_throughput=([0-9.]+)")
 _EFF_RE = re.compile(r"efficiency=([0-9.]+)")
+_P50_RE = re.compile(r"p50_ms=([0-9.]+)")
+_P99_RE = re.compile(r"p99_ms=([0-9.]+)")
+_QPS_RE = re.compile(r"qps_sustained=([0-9.]+)")
+_COMPILES_RE = re.compile(r"compiles_steady=(\d+)")
 # Committed scaling-efficiency floor at the largest shard count: the
 # posting-mass-balanced partition of the smoke corpus must keep at least
 # this fraction of perfect linear scaling at s=8 (fake CPU devices; the
@@ -134,8 +153,50 @@ def sharded_metrics(doc: dict) -> Dict[int, Dict[str, float]]:
     return out
 
 
+def serving_metrics(doc: dict) -> Dict[str, Dict[str, float]]:
+    """``serving/*`` row name -> {"p50", "p99", "qps", "compiles"} (rows
+    lacking the latency fields — and pre-serving baselines — are
+    absent).  ``compiles`` is the steady-state jit-compile count after
+    the shape-grid prewarm; committed baselines carry 0."""
+    out: Dict[str, Dict[str, float]] = {}
+    for r in doc.get("rows", []):
+        name = r.get("name", "")
+        if not name.startswith("serving/"):
+            continue
+        derived = r.get("derived", "")
+        m99 = _P99_RE.search(derived)
+        mq = _QPS_RE.search(derived)
+        if not (m99 and mq):
+            continue
+        m50 = _P50_RE.search(derived)
+        mc = _COMPILES_RE.search(derived)
+        out[name] = {
+            "p50": float(m50.group(1)) if m50 else float("nan"),
+            "p99": float(m99.group(1)),
+            "qps": float(mq.group(1)),
+            "compiles": float(mc.group(1)) if mc else 0.0,
+        }
+    return out
+
+
 def row_names(doc: dict) -> set:
     return {r.get("name", "") for r in doc.get("rows", [])}
+
+
+def filter_prefix(doc: dict, prefix: str) -> dict:
+    """The document restricted to rows whose name starts with ``prefix``
+    — scoped gating for partial runs.  ``total_seconds`` is zeroed (a
+    subset's wall-clock is not comparable to the full baseline's);
+    fresh-run errors are kept (a broken partial run must still fail)."""
+    return {
+        **doc,
+        "rows": [
+            r
+            for r in doc.get("rows", [])
+            if r.get("name", "").startswith(prefix)
+        ],
+        "total_seconds": 0.0,
+    }
 
 
 def compare(
@@ -145,6 +206,7 @@ def compare(
     max_wallclock_regression: float | None = None,
     warnings: List[str] | None = None,
     min_scaling_efficiency: float = MIN_SCALING_EFFICIENCY,
+    max_serving_regression: float | None = None,
 ) -> List[str]:
     """Failure messages (empty = gate passes).
 
@@ -153,13 +215,20 @@ def compare(
     """
     if max_wallclock_regression is None:
         max_wallclock_regression = max_regression
+    if max_serving_regression is None:
+        max_serving_regression = max_regression
     if warnings is None:
         warnings = []
     fails: List[str] = []
     base_sp = engine_speedups(baseline)
     fresh_sp = engine_speedups(fresh)
-    if not base_sp:
-        fails.append("baseline has no batched_engine rows — regenerate it")
+    if not base_sp and not sharded_metrics(baseline) and not serving_metrics(
+        baseline
+    ):
+        fails.append(
+            "baseline has no gateable rows (batched_engine / sharded / "
+            "serving) — regenerate it"
+        )
     for name, b in sorted(base_sp.items()):
         f = fresh_sp.get(name)
         if f is None:
@@ -233,6 +302,33 @@ def compare(
             "sharded_engine: baseline has sharded rows but the fresh run "
             "has none"
         )
+    # Serving-SLO gate: p99 latency and sustained QPS are absolute
+    # measurements (loose tolerance when hardware differs, like
+    # wall-clock); the steady-state compile count is machine-independent
+    # and must never grow — a compile appearing after prewarm means the
+    # shape grid no longer covers the replay.
+    base_srv = serving_metrics(baseline)
+    fresh_srv = serving_metrics(fresh)
+    for name, b in sorted(base_srv.items()):
+        f = fresh_srv.get(name)
+        if f is None:
+            continue  # the generic row-disappearance check reports it
+        if f["p99"] > b["p99"] * (1.0 + max_serving_regression):
+            fails.append(
+                f"{name}: p99 latency regressed {b['p99']:.2f}ms -> "
+                f"{f['p99']:.2f}ms (> {max_serving_regression:.0%} growth)"
+            )
+        if f["qps"] < b["qps"] * (1.0 - max_serving_regression):
+            fails.append(
+                f"{name}: sustained QPS regressed {b['qps']:.0f} -> "
+                f"{f['qps']:.0f} (> {max_serving_regression:.0%} drop)"
+            )
+        if f["compiles"] > b["compiles"]:
+            fails.append(
+                f"{name}: steady-state jit compiles after prewarm "
+                f"({b['compiles']:.0f} -> {f['compiles']:.0f}) — the "
+                "shape-grid prewarm no longer covers the replay"
+            )
     # ANY baseline row that vanished fails the gate — a benchmark
     # silently dropped is a hole in the perf trajectory, not a pass.
     # (batched_engine rows already failed above with a richer message.)
@@ -286,6 +382,8 @@ def write_step_summary(
     fresh_dr = engine_device_ratios(fresh)
     base_sh = sharded_metrics(baseline)
     fresh_sh = sharded_metrics(fresh)
+    base_srv = serving_metrics(baseline)
+    fresh_srv = serving_metrics(fresh)
 
     def cell(v, fmt="{:.2f}"):
         return "–" if v is None else fmt.format(v)
@@ -315,6 +413,24 @@ def write_step_summary(
                 f"| s{s} "
                 f"| {cell(b and b['agg'])} → {cell(f and f['agg'])} "
                 f"| {cell(b and b['eff'])} → {cell(f and f['eff'])} |"
+            )
+    if base_srv or fresh_srv:
+        lines += [
+            "",
+            "| serving row | p50 ms (base → fresh) | p99 ms (base → fresh) "
+            "| QPS (base → fresh) | steady compiles (base → fresh) |",
+            "|---|---|---|---|---|",
+        ]
+        for name in sorted(set(base_srv) | set(fresh_srv)):
+            b, f = base_srv.get(name), fresh_srv.get(name)
+            lines.append(
+                f"| `{name}` "
+                f"| {cell(b and b['p50'])} → {cell(f and f['p50'])} "
+                f"| {cell(b and b['p99'])} → {cell(f and f['p99'])} "
+                f"| {cell(b and b['qps'], '{:.0f}')} → "
+                f"{cell(f and f['qps'], '{:.0f}')} "
+                f"| {cell(b and b['compiles'], '{:.0f}')} → "
+                f"{cell(f and f['compiles'], '{:.0f}')} |"
             )
     bt = baseline.get("total_seconds", 0)
     ft = fresh.get("total_seconds", 0)
@@ -357,6 +473,22 @@ def main(argv: List[str] | None = None) -> int:
         "sharded_engine shard count",
     )
     ap.add_argument(
+        "--max-serving-regression",
+        type=float,
+        default=None,
+        help="allowed fractional p99-latency growth / sustained-QPS drop "
+        "on serving/* rows (default: --max-regression; set loose when "
+        "baseline hardware differs from the judging runner — the "
+        "steady-state compile gate stays exact regardless)",
+    )
+    ap.add_argument(
+        "--only-prefix",
+        default=None,
+        help="gate only rows whose name starts with this prefix (e.g. "
+        "'serving/' for the standalone serving job's partial artifact); "
+        "skips the wall-clock check",
+    )
+    ap.add_argument(
         "--update",
         action="store_true",
         help="copy the fresh run over the baseline instead of gating "
@@ -365,12 +497,22 @@ def main(argv: List[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     if args.update:
+        if args.only_prefix:
+            print(
+                "--update with --only-prefix would overwrite the full "
+                "baseline with a partial run; refusing",
+                file=sys.stderr,
+            )
+            return 1
         shutil.copyfile(args.fresh, args.baseline)
         print(f"baseline updated: {args.baseline}")
         return 0
 
     baseline = load(args.baseline)
     fresh = load(args.fresh)
+    if args.only_prefix:
+        baseline = filter_prefix(baseline, args.only_prefix)
+        fresh = filter_prefix(fresh, args.only_prefix)
     warnings: List[str] = []
     fails = compare(
         baseline,
@@ -379,6 +521,7 @@ def main(argv: List[str] | None = None) -> int:
         args.max_wallclock_regression,
         warnings=warnings,
         min_scaling_efficiency=args.min_scaling_efficiency,
+        max_serving_regression=args.max_serving_regression,
     )
     base_sp = engine_speedups(baseline)
     fresh_sp = engine_speedups(fresh)
@@ -407,6 +550,16 @@ def main(argv: List[str] | None = None) -> int:
         print(
             f"sharded_engine/s{s}: agg {_fmt(b, 'agg')} -> {_fmt(f, 'agg')}; "
             f"efficiency {_fmt(b, 'eff')} -> {_fmt(f, 'eff')}"
+        )
+    base_srv = serving_metrics(baseline)
+    fresh_srv = serving_metrics(fresh)
+    for name in sorted(set(base_srv) | set(fresh_srv)):
+        b = base_srv.get(name)
+        f = fresh_srv.get(name)
+        print(
+            f"{name}: p99 {_fmt(b, 'p99')}ms -> {_fmt(f, 'p99')}ms; "
+            f"qps {_fmt(b, 'qps')} -> {_fmt(f, 'qps')}; "
+            f"steady compiles {_fmt(b, 'compiles')} -> {_fmt(f, 'compiles')}"
         )
     print(
         f"wall-clock: baseline {baseline.get('total_seconds', 0)}s -> "

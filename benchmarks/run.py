@@ -19,9 +19,10 @@ import sys
 import time
 
 # Fast, deterministic-size suites: one clustering row, one index row, one
-# kernel row.  The heavy sweeps (scaling, datasets, roofline) stay out of
-# the smoke path — CI budgets minutes, not hours.
-SMOKE_SUITES = ("speedups", "compression", "kernels")
+# kernel row, one serving-replay row set.  The heavy sweeps (scaling,
+# datasets, roofline) stay out of the smoke path — CI budgets minutes,
+# not hours.
+SMOKE_SUITES = ("speedups", "compression", "kernels", "serving")
 
 
 def main() -> None:
@@ -42,6 +43,7 @@ def main() -> None:
         bench_datasets,
         bench_kernels,
         bench_scaling,
+        bench_serving,
         bench_speedups,
         bench_tc,
         roofline_table,
@@ -56,6 +58,7 @@ def main() -> None:
         "compression": bench_compression,
         "comparison_cost": bench_comparison_cost,
         "kernels": bench_kernels,
+        "serving": bench_serving,
         "roofline": roofline_table,
     }
     print("name,us_per_call,derived")

@@ -32,6 +32,15 @@ silently rotting, so they are linted as ASTs:
   jnp oracle), ``ops.py`` importing the oracle as its fallback, and a
   ``tests/test_kernels_<name>.py`` kernel≡ref test.
 
+* **SEC005** — jit construction in the serving request path
+  (``serve/*``): the serving loop's whole latency story rests on the
+  shape-grid prewarm — every executable compiled at startup, zero
+  traces under traffic.  ``jax.jit`` (or ``partial(jax.jit, ...)``)
+  constructed inside any function body of a serve module builds a
+  fresh empty cache per request and retraces every batch; bind jitted
+  callables at module level or behind ``functools.lru_cache`` (the
+  engine's pattern) and let the loop prewarm them.
+
 ``lint_paths`` is the engine; ``tools/seclint.py`` is the CLI.  Rules
 are deliberately narrow: a finding is an invariant violation, not a
 style nit, and ``src/`` must stay finding-free (CI enforces it).
@@ -52,6 +61,7 @@ RULES = {
     "SEC002": "jit recompilation hazard",
     "SEC003": "literal -1 sentinel instead of PAD/QUERY_PAD",
     "SEC004": "incomplete kernel contract (kernel + ref + ops + test)",
+    "SEC005": "jit construction in the serving request path",
 }
 
 # Modules whose traced code must never sync to host (SEC001).  Matched
@@ -62,6 +72,10 @@ DEVICE_PATH_PATTERNS = (
     "*/kernels/*/ref.py",
     "*/kernels/*/ops.py",
 )
+
+# Serving modules whose function bodies must never construct jit
+# (SEC005): request-path code compiles at startup, not under traffic.
+SERVE_PATH_PATTERNS = ("*/serve/*.py",)
 
 # Data-plane modules where -1 must be spelled PAD/QUERY_PAD (SEC003).
 # analysis/ is excluded: the linter itself necessarily names -1.
@@ -641,6 +655,55 @@ def _check_sec003(tree: ast.Module, path: str) -> List[Finding]:
 
 
 # ----------------------------------------------------------------------
+# SEC005 — jit construction in the serving request path
+# ----------------------------------------------------------------------
+
+
+def _check_sec005(scan: _ModuleScan, path: str) -> List[Finding]:
+    """Flag ``jax.jit(...)`` / ``partial(jax.jit, ...)`` constructed inside
+    any function body of a serve module.
+
+    Request-path functions run per batch under traffic; a jit built there
+    starts with an empty compile cache every call, so the shape-grid
+    prewarm can never cover it.  Module-level bindings and
+    ``functools.lru_cache``-decorated builders (the engine's pattern:
+    construct once, reuse the cached executable) are the sanctioned
+    homes and are exempt.
+    """
+    findings: List[Finding] = []
+    for node in ast.walk(scan.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if _is_cache_decorated(node):
+            continue
+        # Decorators evaluate once at def time, not per call — a
+        # ``@jax.jit`` on a nested def is someone else's problem
+        # (SEC002 territory), not a per-request construction.
+        deco_nodes = {
+            id(n) for d in node.decorator_list for n in ast.walk(d)
+        }
+        for sub in _own_body_nodes(node):
+            if id(sub) in deco_nodes:
+                continue
+            call = _jit_call_info(sub)
+            if call is None:
+                continue
+            findings.append(
+                Finding(
+                    "SEC005",
+                    path,
+                    call.lineno,
+                    call.col_offset,
+                    "jax.jit constructed in the serving request path — "
+                    "bind the jitted callable at startup (module level "
+                    "or a functools.lru_cache builder) and prewarm its "
+                    f"shape grid (in `{node.name}`)",
+                )
+            )
+    return findings
+
+
+# ----------------------------------------------------------------------
 # SEC004 — kernel-contract completeness (directory-level rule)
 # ----------------------------------------------------------------------
 
@@ -718,7 +781,8 @@ def check_kernel_contracts(
 
 
 def lint_source(source: str, path: str) -> List[Finding]:
-    """Per-file rules (SEC001–SEC003) over one module's source text."""
+    """Per-file rules (SEC001–SEC003, SEC005) over one module's source
+    text."""
     try:
         tree = ast.parse(source)
     except SyntaxError as exc:
@@ -728,14 +792,14 @@ def lint_source(source: str, path: str) -> List[Finding]:
             )
         ]
     findings: List[Finding] = []
+    scan = _ModuleScan(tree)
     if _matches(path, DEVICE_PATH_PATTERNS):
-        scan = _ModuleScan(tree)
         findings += _check_sec001(scan, path)
-        findings += _check_sec002(scan, path)
-    else:
-        findings += _check_sec002(_ModuleScan(tree), path)
+    findings += _check_sec002(scan, path)
     if _matches(path, SENTINEL_PATTERNS):
         findings += _check_sec003(tree, path)
+    if _matches(path, SERVE_PATH_PATTERNS):
+        findings += _check_sec005(scan, path)
     return findings
 
 

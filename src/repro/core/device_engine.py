@@ -48,7 +48,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +68,10 @@ __all__ = [
     "lower_plan",
     "device_fold",
     "device_counts",
+    "fold_cache_size",
+    "plan_shape_key",
+    "warm_fold",
+    "prewarm",
     "ShardedDeviceIndex",
     "ShardedLoweredPlan",
     "sharded_device_index",
@@ -466,6 +471,127 @@ def device_fold(
 
 
 # ----------------------------------------------------------------------
+# Shape-grid prewarm: compile the fold's cache entries at startup
+# ----------------------------------------------------------------------
+#
+# The fused fold's jit-cache key is the quantized shape tuple
+# (n_cells, group_width, stage_iters, n_queries_pad) — everything else
+# is traced data.  A serving loop can therefore enumerate the keys its
+# batch plan will produce, compile each once on *dead* cell content
+# (all-PAD cells, zero segments — the fold is mask-safe by design), and
+# then serve indefinitely without a single steady-state compile.
+
+
+def fold_cache_size() -> int:
+    """Compiled-entry count of the fused fold — the serving loop's
+    compile counter.  0 when this jax version exposes no cache probe."""
+    from repro.analysis.sanitize import jit_cache_size
+
+    try:
+        return jit_cache_size(_fused_fold)
+    except AttributeError:  # pragma: no cover - other jax versions
+        return 0
+
+
+def plan_shape_key(lowered: LoweredPlan) -> Tuple[int, int, Tuple[int, ...], int]:
+    """The jit-cache key of a lowered plan: the quantized shape tuple
+    ``(n_cells, group_width, stage_iters, n_queries_pad)``.  Two plans
+    with equal keys share one compiled executable."""
+    return (
+        lowered.n_cells,
+        lowered.group_width,
+        lowered.stage_iters,
+        lowered.n_queries_pad,
+    )
+
+
+def warm_fold(
+    dindex: DeviceIndex,
+    key: Tuple[int, int, Tuple[int, ...], int],
+    return_members: bool = False,
+) -> None:
+    """Compile the fused fold for one shape key without a real plan.
+
+    Builds dead content of exactly the key's shapes — all-PAD cells with
+    arity 0 and out-of-range query ids, zero-length segments — so the
+    executable lands in the jit cache at startup cost but near-zero
+    execution cost.  The fold masks dead cells everywhere, so warming
+    content never touches real postings.
+    """
+    n_cells, group_width, stage_iters, n_queries_pad = key
+    cells = np.empty((4, n_cells), np.int32)
+    cells[0] = PAD
+    cells[1] = 0
+    cells[2] = n_queries_pad
+    cells[3] = 0
+    stage_seg = np.zeros((2, len(stage_iters) * group_width), np.int32)
+    out = _fused_fold(
+        dindex.post_docs,
+        jax.device_put(cells),
+        jax.device_put(stage_seg),
+        group_width=group_width,
+        stage_iters=tuple(stage_iters),
+        n_queries_pad=n_queries_pad,
+        return_members=return_members,
+    )
+    jax.device_get(out[0])  # block: the compile is done when we return
+
+
+def prewarm(
+    cidx,
+    queries,
+    batch_sizes: Optional[Sequence[int]] = None,
+    batches: Optional[Sequence[Tuple[int, int]]] = None,
+    dindex: Optional[DeviceIndex] = None,
+    return_members: bool = False,
+) -> Dict[str, object]:
+    """Pre-compile the fused fold's quantized shape grid for a workload.
+
+    ``queries`` is a representative sample (e.g. yesterday's log);
+    either ``batches`` gives explicit ``(start, end)`` windows into it —
+    e.g. the exact windows :func:`repro.serve.loop.plan_batches` will
+    dispatch — or ``batch_sizes`` names prefix sizes to warm.  Each
+    window is planned and lowered on host only (cheap) to find its shape
+    key; each distinct key compiles once via :func:`warm_fold`.
+
+    Returns ``{"n_batches", "n_keys", "n_compiles", "keys"}`` —
+    ``n_compiles <= n_keys`` since some keys may already be cached.
+    """
+    from repro.core.batched_query import plan_segment_pairs
+
+    cq = as_queries(queries)
+    if dindex is None:
+        dindex = device_index(cidx)
+    if batches is None:
+        if batch_sizes is None:
+            raise ValueError("prewarm needs batch_sizes or explicit batches")
+        batches = [(0, min(int(b), cq.n_queries)) for b in batch_sizes]
+    before = fold_cache_size()
+    keys: List[Tuple[int, int, Tuple[int, ...], int]] = []
+    seen = set()
+    n_batches = 0
+    for i, j in batches:
+        if j <= i:
+            continue
+        n_batches += 1
+        plan = plan_segment_pairs(dindex.host, cq[int(i) : int(j)], track_work=False)
+        if plan.n_pairs == 0:
+            continue  # empty plans never reach the fold
+        key = plan_shape_key(lower_plan(plan))
+        if key in seen:
+            continue
+        seen.add(key)
+        keys.append(key)
+        warm_fold(dindex, key, return_members=return_members)
+    return {
+        "n_batches": n_batches,
+        "n_keys": len(keys),
+        "n_compiles": fold_cache_size() - before,
+        "keys": keys,
+    }
+
+
+# ----------------------------------------------------------------------
 # Public entry: counts (and docs) for a whole batch
 # ----------------------------------------------------------------------
 
@@ -513,10 +639,15 @@ def device_counts(
     true cells; the long sides are probed in place and contribute zero
     padding), ``occupancy`` (live survivor cells / cells carried across
     all stages — the masked-execution analogue of pad waste), and
-    ``stages`` (per-stage attribution dicts).
+    ``stages`` (per-stage attribution dicts).  Per-call timing hooks for
+    the serving loop ride along: ``t_plan_s`` / ``t_lower_s`` /
+    ``t_fold_s`` split the call into host planning, lowering, and the
+    fused dispatch (incl. the device round-trip); ``jit_compiles`` is
+    the fold-cache growth this call caused (0 on every warm path).
     """
     from repro.core.batched_query import plan_segment_pairs
 
+    t0 = time.perf_counter()
     cq = as_queries(queries)
     if dindex is None:
         dindex = device_index(cidx)
@@ -524,6 +655,7 @@ def device_counts(
         # The device path needs the segment layout, not the paper's work
         # metric — plan without the probe/scan accounting.
         plan = plan_segment_pairs(dindex.host, cq, track_work=False)
+    t_plan = time.perf_counter() - t0
     if plan.n_pairs == 0:
         counts = np.zeros(plan.n_queries, np.int64)
         info = {
@@ -532,17 +664,26 @@ def device_counts(
             "padding_overhead": 1.0,
             "occupancy": 1.0,
             "stages": [],
+            "t_plan_s": t_plan,
+            "t_lower_s": 0.0,
+            "t_fold_s": 0.0,
+            "jit_compiles": 0.0,
         }
         if return_docs:
             return counts, np.empty(0, np.int32), info
         return counts, info
 
+    t1 = time.perf_counter()
     lowered = lower_plan(plan)
+    t_lower = time.perf_counter() - t1
+    cache_before = fold_cache_size()
+    t2 = time.perf_counter()
     counts_d, entering_d, members_d = device_fold(
         dindex, lowered, return_members=return_docs
     )
     counts = jax.device_get(counts_d)[: lowered.n_queries].astype(np.int64)
     entering = jax.device_get(entering_d)
+    t_fold = time.perf_counter() - t2
 
     stages = _stage_info(lowered, entering)
     true_cells = float(lowered.n_cells_true)
@@ -556,6 +697,10 @@ def device_counts(
         / max(true_cells + long_cells, 1.0),
         "occupancy": live / max(carried, 1.0),
         "stages": stages,
+        "t_plan_s": t_plan,
+        "t_lower_s": t_lower,
+        "t_fold_s": t_fold,
+        "jit_compiles": float(fold_cache_size() - cache_before),
     }
     if not return_docs:
         return counts, info
@@ -974,8 +1119,10 @@ def sharded_device_counts(
     cells — the deterministic load-balance speedup bound) and
     ``load_balance`` (= agg_throughput / n_shards, the scaling
     efficiency)."""
+    from repro.analysis.sanitize import jit_cache_size
     from repro.core.batched_query import plan_segment_pairs
 
+    t0 = time.perf_counter()
     cq = as_queries(queries)
     if sidx is None:
         sidx = (
@@ -985,6 +1132,7 @@ def sharded_device_counts(
         )
     if plan is None:
         plan = plan_segment_pairs(sidx.host, cq, track_work=False)
+    t_plan = time.perf_counter() - t0
     if plan.n_pairs == 0:
         counts = np.zeros(plan.n_queries, np.int64)
         info = {
@@ -996,11 +1144,16 @@ def sharded_device_counts(
             "agg_throughput": 1.0,
             "load_balance": 1.0 / max(sidx.n_shards, 1),
             "padding_overhead": 1.0,
+            "t_plan_s": t_plan,
+            "t_lower_s": 0.0,
+            "t_fold_s": 0.0,
+            "jit_compiles": 0.0,
         }
         if return_docs:
             return counts, np.empty(0, np.int32), info
         return counts, info
 
+    t1 = time.perf_counter()
     lowered = lower_plan_sharded(plan, sidx)
     fold = _build_sharded_fold(
         sidx.mesh,
@@ -1009,12 +1162,18 @@ def sharded_device_counts(
         lowered.n_queries_pad,
         bool(return_docs),
     )
+    t_lower = time.perf_counter() - t1
+    try:
+        cache_before = jit_cache_size(fold)
+    except AttributeError:  # pragma: no cover - other jax versions
+        cache_before = None
     # Explicit per-batch upload, pre-placed shard-per-row so the jit
     # never reshards (and never transfers implicitly).
     from jax.sharding import NamedSharding
 
     from repro.dist import sharding as sh
 
+    t2 = time.perf_counter()
     cells_spec, seg_spec = sh.plan_specs(sidx.mesh)
     out = fold(
         sidx.post_docs,
@@ -1024,6 +1183,12 @@ def sharded_device_counts(
         ),
     )
     counts = jax.device_get(out[0])[: lowered.n_queries].astype(np.int64)
+    t_fold = time.perf_counter() - t2
+    compiles = (
+        0.0
+        if cache_before is None
+        else float(jit_cache_size(fold) - cache_before)
+    )
     total_true = float(lowered.n_cells_true.sum())
     max_true = float(lowered.n_cells_true.max())
     info = {
@@ -1037,6 +1202,10 @@ def sharded_device_counts(
         / max(lowered.n_shards * max_true, 1.0),
         "padding_overhead": float(lowered.n_shards * lowered.n_cells)
         / max(total_true, 1.0),
+        "t_plan_s": t_plan,
+        "t_lower_s": t_lower,
+        "t_fold_s": t_fold,
+        "jit_compiles": compiles,
     }
     if not return_docs:
         return counts, info

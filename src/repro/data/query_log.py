@@ -25,7 +25,12 @@ import numpy as np
 from repro.core.queries import QUERY_PAD, ConjunctiveQueries
 from repro.data.corpus import Corpus
 
-__all__ = ["QueryLog", "synth_query_log", "term_probabilities"]
+__all__ = [
+    "QueryLog",
+    "synth_query_log",
+    "term_probabilities",
+    "poisson_arrivals",
+]
 
 
 @dataclasses.dataclass
@@ -36,9 +41,15 @@ class QueryLog:
     with fewer terms are filled with ``QUERY_PAD`` (-1).  Terms within a
     query are distinct.  The historical 2-term log is the pad-free
     ``max_arity == 2`` case.
+
+    ``arrivals`` (optional) carries one open-loop arrival timestamp per
+    query — float64 seconds, nondecreasing — for serving replay
+    (``repro.serve.replay``).  A log without timestamps is the
+    historical closed-batch form.
     """
 
     queries: np.ndarray
+    arrivals: Optional[np.ndarray] = None
 
     @property
     def n_queries(self) -> int:
@@ -67,6 +78,26 @@ class QueryLog:
         }
 
 
+def poisson_arrivals(
+    n: int,
+    qps: float,
+    seed: int = 0,
+    rng: Optional[np.random.Generator] = None,
+) -> np.ndarray:
+    """Open-loop Poisson arrival timestamps at a mean rate of ``qps``.
+
+    Returns ``n`` nondecreasing float64 seconds: the cumulative sum of
+    exponential inter-arrival gaps with mean ``1/qps``.  Open-loop means
+    arrivals do not wait for replies — the process the serving loop must
+    absorb, as opposed to closed-loop ping-pong benchmarking.
+    """
+    if qps <= 0:
+        raise ValueError(f"qps must be positive, got {qps}")
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / qps, size=int(n)))
+
+
 def synth_query_log(
     corpus: Corpus,
     n_queries: int = 20_000,
@@ -76,6 +107,7 @@ def synth_query_log(
     seed: int = 1,
     arity: int | Sequence[int] = 2,
     arity_weights: Optional[Sequence[float]] = None,
+    arrival_qps: Optional[float] = None,
 ) -> QueryLog:
     """Sample a Zipf-like conjunctive query log against ``corpus``.
 
@@ -90,6 +122,11 @@ def synth_query_log(
     paper's setting — identical samples to the historical 2-term-only
     sampler) or a sequence of arities sampled per query with optional
     ``arity_weights``; ragged rows are ``QUERY_PAD``-filled.
+
+    ``arrival_qps``, when given, attaches Poisson arrival timestamps at
+    that mean rate (``QueryLog.arrivals``).  Arrivals are drawn strictly
+    after every query draw from the same rng, so the query stream for a
+    given seed is bit-identical with or without timestamps.
     """
     rng = np.random.default_rng(seed)
     df = corpus.term_doc_freq().astype(np.float64)
@@ -126,6 +163,13 @@ def synth_query_log(
                 u[np.flatnonzero(in_block)[ok]] = u2[ok]
         return u
 
+    def _arrivals() -> Optional[np.ndarray]:
+        # Called after the last query draw: the rng stream consumed by the
+        # query sampler is unchanged by the presence of timestamps.
+        if arrival_qps is None:
+            return None
+        return poisson_arrivals(n_queries, arrival_qps, rng=rng)
+
     arities = np.atleast_1d(np.asarray(arity, dtype=np.int64))
     if (arities < 1).any():
         raise ValueError("query arity must be >= 1")
@@ -141,7 +185,7 @@ def synth_query_log(
             u[eq] = draw(int(eq.sum()))
             eq = t == u
         q = np.stack([t, u], axis=1).astype(np.int32)
-        return QueryLog(queries=q)
+        return QueryLog(queries=q, arrivals=_arrivals())
 
     if arity_weights is not None:
         p = np.asarray(arity_weights, dtype=np.float64)
@@ -164,7 +208,7 @@ def synth_query_log(
             u[dup] = draw(int(dup.sum()))
             dup = (q[idx, :slot] == u[:, None]).any(axis=1)
         q[idx, slot] = u
-    return QueryLog(queries=q.astype(np.int32))
+    return QueryLog(queries=q.astype(np.int32), arrivals=_arrivals())
 
 
 def term_probabilities(

@@ -1,2 +1,4 @@
-"""Serving layer: the distributed SeCluD search service, batched request
-scheduling, and the recsys retrieval pipeline with SeCluD pre-filtering."""
+"""Serving layer: the distributed SeCluD search service, the async
+deadline-batching request loop with latency SLO accounting
+(:mod:`repro.serve.loop` / :mod:`repro.serve.replay`), and the recsys
+retrieval pipeline with SeCluD pre-filtering."""

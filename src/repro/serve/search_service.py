@@ -150,6 +150,26 @@ class SearchService:
             return_docs=return_docs,
         )
 
+    # -- async serving loop -----------------------------------------------
+
+    def serve_async(self, config=None, **config_kwargs):
+        """An :class:`repro.serve.loop.AsyncServingLoop` over this
+        service's device path: arrivals accumulate under a
+        deadline/max-batch policy and each sealed batch dispatches as
+        one fused engine call (through the mesh-sharded fold after
+        :meth:`enable_sharded`).
+
+        Pass a :class:`repro.serve.loop.ServeConfig` or its fields as
+        keywords (``max_batch=``, ``deadline_s=``).  ``await start()``
+        inside a running event loop; call ``prewarm()`` first so
+        steady-state serving never compiles.
+        """
+        from repro.serve.loop import AsyncServingLoop, ServeConfig
+
+        return AsyncServingLoop(
+            self, config or ServeConfig(**config_kwargs)
+        )
+
     # -- sharded serving + failover ---------------------------------------
 
     @property

@@ -1,0 +1,23 @@
+"""Bad fixture: jit constructed per request in the serving path (SEC005)."""
+
+import functools
+
+import jax
+
+
+def fold(counts):
+    return counts.sum()
+
+
+async def handle_request(batch):
+    # BAD: a fresh jit per request — empty compile cache every call,
+    # the startup shape-grid prewarm can never cover it.
+    fn = jax.jit(fold)
+    return fn(batch)
+
+
+def dispatch(batch, n):
+    # BAD: partial(jax.jit, ...) is the same construction, spelled
+    # differently.
+    fn = functools.partial(jax.jit, static_argnames=("n",))(fold)
+    return fn(batch, n=n)

@@ -7,7 +7,9 @@ from benchmarks.compare import (
     compare,
     engine_device_ratios,
     engine_speedups,
+    filter_prefix,
     main,
+    serving_metrics,
     sharded_metrics,
     write_step_summary,
 )
@@ -316,6 +318,186 @@ def test_main_min_scaling_efficiency_flag(tmp_path):
     ) == 1
 
 
+def _with_serving(doc, metrics):
+    """Append ``serving/forum/replay/r{qps}`` rows; ``metrics`` maps qps
+    -> (p50_ms, p99_ms, qps_sustained, compiles_steady) in the
+    bench_serving derived format."""
+    for qps, (p50, p99, sus, comp) in metrics.items():
+        doc["rows"].append(
+            {
+                "name": f"serving/forum/replay/r{qps}",
+                "us_per_call": p50 * 1e3,
+                "derived": f"qps_offered={qps};qps_sustained={sus:.1f};"
+                f"p50_ms={p50:.3f};p99_ms={p99:.3f};p999_ms={p99 * 1.5:.3f};"
+                f"mean_batch=12.0;occupancy=0.19;batches=50;"
+                f"compiles_steady={comp};prewarm_keys=20;prewarm_compiles=20;"
+                f"prewarm_s=30.0;n=600;hist=1:10/64:40",
+            }
+        )
+    return doc
+
+
+HEALTHY_SERVING = {500: (3.5, 30.0, 510.0, 0), 2000: (2.9, 6.0, 2050.0, 0)}
+
+
+def test_serving_metrics_parses_rows():
+    doc = _with_serving(_doc(BASE), HEALTHY_SERVING)
+    got = serving_metrics(doc)
+    assert set(got) == {
+        "serving/forum/replay/r500", "serving/forum/replay/r2000"
+    }
+    assert got["serving/forum/replay/r500"] == {
+        "p50": 3.5, "p99": 30.0, "qps": 510.0, "compiles": 0.0
+    }
+    assert serving_metrics(_doc(BASE)) == {}  # pre-serving baseline
+
+
+def test_serving_gate_passes_on_healthy_run():
+    base = _with_serving(_doc(BASE), HEALTHY_SERVING)
+    fresh = _with_serving(_doc(BASE), HEALTHY_SERVING)
+    assert compare(base, fresh) == []
+    # mild latency noise within the tolerance passes
+    noisy = {q: (p50 * 1.1, p99 * 1.1, s * 0.9, c)
+             for q, (p50, p99, s, c) in HEALTHY_SERVING.items()}
+    assert compare(base, _with_serving(_doc(BASE), noisy)) == []
+
+
+def test_serving_gate_trips_on_injected_p99_regression():
+    """The acceptance criterion: an injected latency regression provably
+    fails the gate."""
+    slow = dict(HEALTHY_SERVING)
+    slow[2000] = (2.9, 6.0 * 2.0, 2050.0, 0)  # injected 2x p99 blowup
+    fails = compare(
+        _with_serving(_doc(BASE), HEALTHY_SERVING),
+        _with_serving(_doc(BASE), slow),
+    )
+    assert len(fails) == 1
+    assert "r2000" in fails[0] and "p99 latency regressed" in fails[0]
+    # a deliberately loose tolerance (cross-hardware CI) lets it through
+    assert compare(
+        _with_serving(_doc(BASE), HEALTHY_SERVING),
+        _with_serving(_doc(BASE), slow),
+        max_serving_regression=1.5,
+    ) == []
+
+
+def test_serving_gate_trips_on_qps_drop():
+    slow = dict(HEALTHY_SERVING)
+    slow[500] = (3.5, 30.0, 510.0 * 0.5, 0)  # can no longer keep up
+    fails = compare(
+        _with_serving(_doc(BASE), HEALTHY_SERVING),
+        _with_serving(_doc(BASE), slow),
+    )
+    assert len(fails) == 1
+    assert "r500" in fails[0] and "QPS regressed" in fails[0]
+
+
+def test_serving_gate_trips_on_steady_state_compiles():
+    """The compile gate is exact and survives any latency tolerance: a
+    single compile after prewarm means the shape grid broke."""
+    broken = dict(HEALTHY_SERVING)
+    broken[500] = (3.5, 30.0, 510.0, 3)
+    fails = compare(
+        _with_serving(_doc(BASE), HEALTHY_SERVING),
+        _with_serving(_doc(BASE), broken),
+        max_serving_regression=10.0,  # even absurdly loose
+    )
+    assert len(fails) == 1
+    assert "steady-state jit compiles" in fails[0]
+    assert "prewarm no longer covers" in fails[0]
+
+
+def test_serving_rows_new_in_fresh_warn_not_fail():
+    """A PR introducing the serving bench against a pre-serving baseline
+    must stay green (warn + re-baseline, no same-PR --update dance)."""
+    warnings = []
+    fails = compare(
+        _doc(BASE),
+        _with_serving(_doc(BASE), HEALTHY_SERVING),
+        warnings=warnings,
+    )
+    assert fails == []
+    assert any("not in the baseline" in w for w in warnings)
+
+
+def test_filter_prefix_scopes_the_gate():
+    full = _with_serving(_with_shards(_doc(BASE), HEALTHY_SHARDS),
+                         HEALTHY_SERVING)
+    scoped = filter_prefix(full, "serving/")
+    assert {r["name"] for r in scoped["rows"]} == {
+        "serving/forum/replay/r500", "serving/forum/replay/r2000"
+    }
+    assert scoped["total_seconds"] == 0.0
+    # a serving-only artifact gates cleanly against the scoped full
+    # baseline: no disappearance failures for suites it never ran
+    fresh = filter_prefix(
+        _with_serving(_doc({}, total_seconds=70.0), HEALTHY_SERVING),
+        "serving/",
+    )
+    assert compare(scoped, fresh) == []
+    # and a real serving regression still trips inside the scope
+    slow = dict(HEALTHY_SERVING)
+    slow[500] = (3.5, 90.0, 510.0, 0)
+    fresh_slow = filter_prefix(
+        _with_serving(_doc({}, total_seconds=70.0), slow), "serving/"
+    )
+    fails = compare(scoped, fresh_slow)
+    assert len(fails) == 1 and "p99 latency regressed" in fails[0]
+    # errors survive the filter: a broken partial run must still fail
+    broken = filter_prefix(
+        _with_serving(
+            _doc({}, errors=[{"suite": "serving", "error": "boom"}]),
+            HEALTHY_SERVING,
+        ),
+        "serving/",
+    )
+    assert any("serving" in m and "boom" in m for m in compare(scoped, broken))
+
+
+def test_main_only_prefix_and_serving_flags(tmp_path):
+    base_p = tmp_path / "BENCH_baseline.json"
+    fresh_p = tmp_path / "BENCH_serving.json"
+    base_p.write_text(json.dumps(
+        _with_serving(_with_shards(_doc(BASE), HEALTHY_SHARDS),
+                      HEALTHY_SERVING)
+    ))
+    # serving-only artifact vs full baseline: green only under the scope
+    fresh_p.write_text(json.dumps(
+        _with_serving(_doc({}, total_seconds=70.0), HEALTHY_SERVING)
+    ))
+    assert main([str(fresh_p), "--baseline", str(base_p),
+                 "--only-prefix", "serving/"]) == 0
+    assert main([str(fresh_p), "--baseline", str(base_p)]) == 1  # unscoped
+    # the CLI tolerance flag reaches the serving gate
+    slow = {q: (p50, p99 * 2.0, s, c)
+            for q, (p50, p99, s, c) in HEALTHY_SERVING.items()}
+    fresh_p.write_text(json.dumps(
+        _with_serving(_doc({}, total_seconds=70.0), slow)
+    ))
+    assert main([str(fresh_p), "--baseline", str(base_p),
+                 "--only-prefix", "serving/"]) == 1
+    assert main([str(fresh_p), "--baseline", str(base_p),
+                 "--only-prefix", "serving/",
+                 "--max-serving-regression", "1.5"]) == 0
+    # --update with --only-prefix would clobber the full baseline: refused
+    assert main([str(fresh_p), "--baseline", str(base_p),
+                 "--only-prefix", "serving/", "--update"]) == 1
+    assert json.loads(base_p.read_text())["total_seconds"] == 30.0
+
+
+def test_step_summary_includes_serving_table(tmp_path):
+    base = _with_serving(_doc(BASE), HEALTHY_SERVING)
+    broken = dict(HEALTHY_SERVING)
+    broken[500] = (3.5, 30.0, 510.0, 2)
+    fresh = _with_serving(_doc(BASE), broken)
+    fails = compare(base, fresh)
+    md = write_step_summary(base, fresh, fails, [])
+    assert "| serving row |" in md
+    assert "| `serving/forum/replay/r500` |" in md
+    assert "0 → 2 |" in md  # the compile column shows the break
+    assert "## Perf gate: ❌ FAILED" in md
+
+
 def test_repo_baseline_is_committed_and_gateable():
     """The committed baseline must contain every batched_engine row the
     smoke suite produces (arity 2, 3, 5)."""
@@ -354,3 +536,11 @@ def test_repo_baseline_is_committed_and_gateable():
     assert sh[8]["eff"] >= MIN_SCALING_EFFICIENCY, sh
     aggs = [sh[s]["agg"] for s in sorted(sh)]
     assert aggs == sorted(aggs), aggs  # monotone in the committed run too
+    # Serving rows are baselined with a provably covering prewarm: the
+    # committed steady-state compile count is 0 at every QPS point, so
+    # the exact compile gate has teeth from day one.
+    srv = serving_metrics(doc)
+    assert srv, "baseline must carry serving/* rows"
+    assert all(n.startswith("serving/forum/replay/r") for n in srv), srv
+    assert all(m["compiles"] == 0 for m in srv.values()), srv
+    assert all(m["p99"] > 0 and m["qps"] > 0 for m in srv.values()), srv

@@ -105,6 +105,51 @@ def test_sec003_only_in_device_data_paths():
     assert lint_source(src, "pkg/data/corpus.py") == []
 
 
+def test_sec005_jit_in_request_path():
+    src = (FIXTURES / "serve" / "loop.py").read_text()
+    f = lint_source(src, "pkg/serve/loop.py")
+    sec5 = [x for x in f if x.rule == "SEC005"]
+    assert len(sec5) >= 2  # direct jax.jit and partial(jax.jit, ...)
+    assert all("request path" in x.message for x in sec5)
+    # the fixture must trip *only* SEC005 — its sins are pure
+    assert {x.rule for x in f} == {"SEC005"}
+
+
+def test_sec005_scoped_to_serve_modules():
+    src = (FIXTURES / "serve" / "loop.py").read_text()
+    # identical code outside serve/ is the engine's own business
+    assert all(
+        x.rule != "SEC005" for x in lint_source(src, "pkg/core/engine.py")
+    )
+
+
+def test_sec005_startup_bindings_are_exempt():
+    src = """\
+import functools
+
+import jax
+
+
+def _fold(counts):
+    return counts.sum()
+
+
+# module-level binding: constructed once at import, prewarmable — fine
+_jitted = jax.jit(_fold)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_fold(n_shards):
+    # cached builder: constructs once per config, the engine's pattern
+    return jax.jit(functools.partial(_fold))
+
+
+async def handle(batch):
+    return _jitted(batch)
+"""
+    assert lint_source(src, "pkg/serve/loop.py") == []
+
+
 def test_sec004_kernel_contract():
     f = check_kernel_contracts(FIXTURES / "kernels", tests_dir=None)
     assert {x.rule for x in f} == {"SEC004"}

@@ -1,0 +1,367 @@
+"""The async serving loop and its replay harness.
+
+Invariants under test: the batching policy is a pure, deterministic
+function of arrival timestamps; batching never changes results (loop ≡
+sealed replay ≡ direct device dispatch ≡ host engine, bit for bit); the
+shape-grid prewarm provably covers a planned replay (zero steady-state
+compiles); and arrival timestamps ride along on the query log without
+perturbing its bit-exact query streams.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.seclud import SecludPipeline
+from repro.data.query_log import QueryLog, poisson_arrivals, synth_query_log
+from repro.serve.loop import (
+    AsyncServingLoop,
+    ServeConfig,
+    plan_batches,
+    seal_times,
+)
+from repro.serve.replay import replay
+from repro.serve.search_service import SearchService
+
+
+@pytest.fixture(scope="module")
+def fitted(small_corpus, small_log):
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    return pipe.fit(small_corpus, k=12, algo="topdown", log=small_log)
+
+
+@pytest.fixture(scope="module")
+def service(fitted):
+    return SearchService(fitted)
+
+
+@pytest.fixture(scope="module")
+def traffic(small_corpus):
+    """A mixed-arity Zipf log with open-loop Poisson arrivals."""
+    return synth_query_log(
+        small_corpus,
+        n_queries=150,
+        seed=5,
+        arity=(1, 2, 3),
+        arity_weights=(0.2, 0.6, 0.2),
+        arrival_qps=400.0,
+    )
+
+
+# ----------------------------------------------------------------------
+# The pure batching policy
+# ----------------------------------------------------------------------
+
+
+def test_serve_config_validates():
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        ServeConfig(deadline_s=-1e-3)
+
+
+def test_plan_batches_deadline_splits_sparse_traffic():
+    # A single request whose deadline fires before the next arrival
+    # must dispatch alone — the single-request SLO case.
+    assert plan_batches(np.array([0.0, 10.0]), 32, 0.5) == [(0, 1), (1, 2)]
+
+
+def test_plan_batches_max_batch_splits_bursts():
+    # 100 simultaneous arrivals, max_batch 32 -> 32/32/32/4.
+    b = plan_batches(np.zeros(100), 32, 1.0)
+    assert b == [(0, 32), (32, 64), (64, 96), (96, 100)]
+
+
+def test_plan_batches_partitions_in_order():
+    t = np.sort(np.random.default_rng(0).random(200)) * 0.1
+    b = plan_batches(t, 16, 0.003)
+    assert b[0][0] == 0 and b[-1][1] == 200
+    assert all(j0 == i1 for (_, j0), (i1, _) in zip(b, b[1:], strict=False))
+    assert all(j - i <= 16 for i, j in b)
+    # every batch honors the deadline: last absorbed arrival within
+    # the first's deadline window
+    assert all(t[j - 1] <= t[i] + 0.003 + 1e-12 for i, j in b)
+
+
+def test_plan_batches_rejects_bad_arrivals():
+    with pytest.raises(ValueError, match="nondecreasing"):
+        plan_batches(np.array([1.0, 0.5]), 8, 0.01)
+    with pytest.raises(ValueError, match="1-d"):
+        plan_batches(np.zeros((3, 2)), 8, 0.01)
+    assert plan_batches(np.array([]), 8, 0.01) == []
+
+
+def test_seal_times_full_vs_deadline_batches():
+    t = np.array([0.0, 0.001, 0.002, 0.5])
+    batches = plan_batches(t, 2, 0.01)
+    assert batches == [(0, 2), (2, 3), (3, 4)]
+    seals = seal_times(t, batches, 2, 0.01)
+    # full batch seals when it fills; deadline batches wait out the clock
+    np.testing.assert_allclose(seals, [0.001, 0.012, 0.51])
+
+
+# ----------------------------------------------------------------------
+# Arrival timestamps on the query log
+# ----------------------------------------------------------------------
+
+
+def test_poisson_arrivals_deterministic_and_monotone():
+    a = poisson_arrivals(500, 1000.0, seed=3)
+    b = poisson_arrivals(500, 1000.0, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert (np.diff(a) >= 0).all() and a[0] > 0
+    assert not np.array_equal(a, poisson_arrivals(500, 1000.0, seed=4))
+    with pytest.raises(ValueError, match="positive"):
+        poisson_arrivals(10, 0.0)
+
+
+def test_arrival_qps_does_not_change_query_stream(small_corpus):
+    """Regression: timestamps are drawn after all query draws, so the
+    arity-2 historical sampler stays bit-identical with them attached."""
+    plain = synth_query_log(small_corpus, n_queries=400, seed=9)
+    timed = synth_query_log(
+        small_corpus, n_queries=400, seed=9, arrival_qps=250.0
+    )
+    np.testing.assert_array_equal(plain.queries, timed.queries)
+    assert plain.arrivals is None
+    assert timed.arrivals is not None and len(timed.arrivals) == 400
+    assert (np.diff(timed.arrivals) >= 0).all()
+    # and for the mixed-arity sampler too
+    plain3 = synth_query_log(small_corpus, n_queries=200, seed=9, arity=(1, 3))
+    timed3 = synth_query_log(
+        small_corpus, n_queries=200, seed=9, arity=(1, 3), arrival_qps=250.0
+    )
+    np.testing.assert_array_equal(plain3.queries, timed3.queries)
+
+
+# ----------------------------------------------------------------------
+# Sealed replay: deterministic, exact, prewarm-coverable
+# ----------------------------------------------------------------------
+
+
+def test_sealed_replay_matches_direct_and_host(service, traffic):
+    cfg = ServeConfig(max_batch=16, deadline_s=0.002)
+    rep = replay(service, traffic, config=cfg)
+    assert rep.mode == "sealed"
+    direct, _ = service.serve_counts_device(traffic.queries)
+    np.testing.assert_array_equal(rep.counts, direct)
+    host, _ = service.serve_counts(traffic.queries)
+    np.testing.assert_array_equal(rep.counts, host)
+    s = rep.summary()
+    assert s["n_requests"] == traffic.n_queries
+    assert s["n_batches"] == len(rep.batches)
+    assert s["p99_ms"] >= s["p50_ms"] >= 0.0
+    assert 0.0 < s["occupancy"] <= 1.0
+
+
+def test_sealed_replay_is_deterministic(service, traffic):
+    cfg = ServeConfig(max_batch=16, deadline_s=0.002)
+    a = replay(service, traffic, config=cfg)
+    b = replay(service, traffic, config=cfg)
+    assert a.batches == b.batches
+    np.testing.assert_array_equal(a.counts, b.counts)
+    # qps-drawn arrivals under a fixed seed are deterministic too
+    log = QueryLog(queries=traffic.queries)
+    c = replay(service, log, qps=400.0, seed=7, config=cfg)
+    d = replay(service, log, qps=400.0, seed=7, config=cfg)
+    assert c.batches == d.batches
+    np.testing.assert_array_equal(c.counts, a.counts)
+
+
+def test_replay_requires_arrivals_or_qps(service, traffic):
+    with pytest.raises(ValueError, match="no arrivals"):
+        replay(service, QueryLog(queries=traffic.queries))
+    with pytest.raises(ValueError, match="unknown replay mode"):
+        replay(service, traffic, mode="warp")
+
+
+def test_replay_empty_plan_batches(service, small_corpus):
+    """Batches whose every term has an empty posting list never reach
+    the fold (empty plan) — the replay must still produce their zero
+    counts and keep request accounting consistent."""
+    df = small_corpus.term_doc_freq()
+    dead = np.flatnonzero(df == 0)
+    assert len(dead) >= 3, "synth corpus should have unused terms"
+    q = np.stack([dead[:3], dead[:3]], axis=1).astype(np.int32)
+    log = QueryLog(
+        queries=q, arrivals=np.array([0.0, 0.0005, 0.001])
+    )
+    rep = replay(service, log, config=ServeConfig(max_batch=8, deadline_s=0.01))
+    np.testing.assert_array_equal(rep.counts, [0, 0, 0])
+    assert rep.stats.n_requests == 3
+
+
+def test_prewarm_covers_planned_replay(service, traffic):
+    """The acceptance bar: prewarm the exact planned windows, then the
+    sealed replay compiles nothing."""
+    from repro.core.device_engine import fold_cache_size, prewarm
+
+    cfg = ServeConfig(max_batch=16, deadline_s=0.002)
+    batches = plan_batches(traffic.arrivals, cfg.max_batch, cfg.deadline_s)
+    pw = prewarm(
+        service.query_index,
+        traffic.queries,
+        batches=batches,
+        dindex=service.device_index,
+    )
+    assert pw["n_batches"] == len(batches)
+    assert pw["n_keys"] >= 1
+    rep = replay(service, traffic, config=cfg)
+    assert rep.jit_compiles == 0, (
+        f"steady state compiled {rep.jit_compiles}x after prewarm"
+    )
+    assert all(c == 0 for c in rep.stats.batch_compiles)
+    # warming the same grid again is a no-op on the cache
+    before = fold_cache_size()
+    pw2 = prewarm(
+        service.query_index,
+        traffic.queries,
+        batches=batches,
+        dindex=service.device_index,
+    )
+    assert pw2["n_compiles"] == 0 and fold_cache_size() == before
+
+
+# ----------------------------------------------------------------------
+# The real-time async loop
+# ----------------------------------------------------------------------
+
+
+def _direct_count(service, terms) -> int:
+    counts, _ = service.serve_counts_device(np.asarray([terms], np.int32))
+    return int(np.asarray(counts)[0])
+
+
+def test_async_loop_single_request_deadline(service, traffic):
+    """One lone request: nothing fills the batch, the deadline must
+    fire and dispatch it alone."""
+    terms = [int(t) for t in traffic.as_conjunctive().terms(0)]
+
+    async def go():
+        loop = service.serve_async(max_batch=32, deadline_s=0.005)
+        await loop.start()
+        count = await loop.submit(terms)
+        await loop.stop()
+        return count, loop.stats
+
+    count, stats = asyncio.run(go())
+    assert count == _direct_count(service, terms)
+    assert stats.batch_sizes == [1]
+    assert stats.n_requests == 1
+    lat = stats.latencies_s()
+    assert lat[0] >= 0.005  # it genuinely waited out the deadline
+
+
+def test_async_loop_burst_splits_and_matches_direct(service, traffic):
+    """A burst larger than max_batch splits into <=max_batch dispatches
+    and every request still gets its exact count."""
+    cq = traffic.as_conjunctive()
+    n = 10
+    reqs = [[int(t) for t in cq.terms(r)] for r in range(n)]
+
+    async def go():
+        loop = service.serve_async(max_batch=4, deadline_s=0.02)
+        await loop.start()
+        counts = await asyncio.gather(*(loop.submit(r) for r in reqs))
+        await loop.stop()
+        return counts, loop.stats
+
+    counts, stats = asyncio.run(go())
+    assert stats.n_requests == n
+    assert sum(stats.batch_sizes) == n
+    assert max(stats.batch_sizes) <= 4
+    assert len(stats.batch_sizes) >= 3  # a 10-burst needs >= ceil(10/4)
+    direct, _ = service.serve_counts_device(traffic.queries[:n])
+    np.testing.assert_array_equal(counts, np.asarray(direct))
+
+
+def test_async_loop_lifecycle_errors(service):
+    loop = service.serve_async()
+
+    async def submit_unstarted():
+        await loop.submit([0])
+
+    with pytest.raises(RuntimeError, match="not started"):
+        asyncio.run(submit_unstarted())
+
+    async def double_start():
+        await loop.start()
+        try:
+            with pytest.raises(RuntimeError, match="already running"):
+                await loop.start()
+        finally:
+            await loop.stop()
+
+    asyncio.run(double_start())
+
+
+def test_loop_prewarm_default_grid_idempotent(service, traffic):
+    """The loop's default power-of-two prewarm: a second call finds the
+    whole grid cached."""
+    loop = service.serve_async(max_batch=8)
+    loop.prewarm(traffic.queries)
+    pw = loop.prewarm(traffic.queries)
+    assert pw["n_compiles"] == 0
+
+
+def test_async_replay_mode_exact(service, small_corpus):
+    """Wall-clock replay through the real loop: composition is timing
+    dependent, results are not."""
+    log = synth_query_log(
+        small_corpus, n_queries=40, seed=21, arrival_qps=2000.0
+    )
+    rep = replay(
+        service, log, config=ServeConfig(max_batch=8, deadline_s=0.005),
+        mode="async",
+    )
+    assert rep.mode == "async"
+    direct, _ = service.serve_counts_device(log.queries)
+    np.testing.assert_array_equal(rep.counts, direct)
+    assert rep.stats.n_requests == 40
+    assert sum(rep.stats.batch_sizes) == 40
+
+
+# ----------------------------------------------------------------------
+# Sharded serving through the loop
+# ----------------------------------------------------------------------
+
+
+def test_sealed_replay_sharded_exact(fitted, small_corpus):
+    """After enable_sharded the same replay serves through the mesh
+    fold — counts still bit-identical to the host engine."""
+    import jax
+
+    n = min(2, len(jax.devices()))
+    svc = SearchService(fitted)
+    svc.enable_sharded(n)
+    log = synth_query_log(
+        small_corpus, n_queries=60, seed=13, arrival_qps=500.0
+    )
+    rep = replay(svc, log, config=ServeConfig(max_batch=16, deadline_s=0.002))
+    host, _ = svc.serve_counts(log.queries)
+    np.testing.assert_array_equal(rep.counts, host)
+
+
+def test_loop_prewarm_sharded_executes_samples(fitted, small_corpus):
+    import jax
+
+    n = min(2, len(jax.devices()))
+    svc = SearchService(fitted)
+    svc.enable_sharded(n)
+    log = synth_query_log(small_corpus, n_queries=32, seed=13)
+    loop = svc.serve_async(max_batch=8)
+    pw = loop.prewarm(log.queries)
+    assert pw["n_batches"] >= 1
+
+
+# ----------------------------------------------------------------------
+# Engine timing hooks (what the loop's telemetry is built on)
+# ----------------------------------------------------------------------
+
+
+def test_device_counts_timing_hooks(service, traffic):
+    _, info = service.serve_counts_device(traffic.queries[:8])
+    for key in ("t_plan_s", "t_lower_s", "t_fold_s", "jit_compiles"):
+        assert key in info, f"info missing {key}"
+        assert float(info[key]) >= 0.0

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""seclint CLI — run the repo's static invariant rules (SEC001–SEC004).
+"""seclint CLI — run the repo's static invariant rules (SEC001–SEC005).
 
 Usage:
     python tools/seclint.py                # lint src/ (the default)
