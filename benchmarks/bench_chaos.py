@@ -1,0 +1,194 @@
+"""Chaos benchmark: serving resilience under injected faults.
+
+Rows (gated by ``benchmarks.compare``):
+
+  chaos/forum/shard_loss — sealed chaos replay with one shard's device
+  dying mid-run.  ``recovery_batches`` is the width of the degraded
+  window (batches served at any rung above "device"); the gate bounds
+  it and requires ``exact=1`` — every response bit-identical to the
+  host engine, before, during and after the eviction+re-partition.
+
+  chaos/forum/brownout — a queue-flood window past the brownout
+  threshold.  ``frac_shed`` is the refused fraction (gated against
+  baseline + slack), ``p99_degraded_ms`` the p99 over *answered*
+  requests while shedding is in play, and ``exact=1`` covers every
+  non-shed response.
+
+Standalone (the CI ``chaos`` job):
+
+  PYTHONPATH=src python -m benchmarks.bench_chaos --smoke
+
+writes a chaos-only JSON in the same schema as ``benchmarks.run
+--smoke``; the suite is also part of the combined smoke run.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _service(quick: bool, n_shards: int):
+    from benchmarks.common import corpus_and_log
+    from repro.core.seclud import SecludPipeline
+    from repro.serve.search_service import SearchService
+
+    n_docs = 8000 if quick else 24000
+    corpus, log = corpus_and_log("forum", n_docs)
+    pipe = SecludPipeline(tc=2000 if quick else 6000, doc_grained_below=512)
+    res = pipe.fit(corpus, k=64, algo="topdown", log=log)
+    svc = SearchService(res)
+    svc.enable_sharded(n_shards=n_shards, strikes_to_evict=3)
+    return corpus, svc
+
+
+def _degraded_window(levels):
+    """Batches from the first to the last non-"device" rung, inclusive —
+    how long the tier took to get back to clean device serving."""
+    hit = [i for i, lv in enumerate(levels) if lv != "device"]
+    return (hit[-1] - hit[0] + 1) if hit else 0
+
+
+def run(quick: bool = True):
+    import jax
+
+    from repro.serve.faults import SHED, FaultSchedule
+    from repro.serve.loop import ServeConfig
+    from repro.serve.replay import replay
+    from repro.serve.resilience import ResilienceConfig
+
+    n_shards = min(4, jax.device_count())
+    cfg = ServeConfig(max_batch=64, deadline_s=0.002)
+    n_queries = 400 if quick else 2000
+    qps = 2000.0
+
+    def fresh():
+        from repro.data.query_log import synth_query_log
+
+        corpus, svc = _service(quick, n_shards)
+        log = synth_query_log(
+            corpus,
+            n_queries=n_queries,
+            co_topic=0.6,
+            seed=17,
+            arity=(1, 2, 3),
+            arity_weights=(0.2, 0.6, 0.2),
+            arrival_qps=qps,
+        )
+        return svc, log
+
+    # -- shard loss: die at batch 2, recover via evict + re-partition ----
+    svc, log = fresh()
+    cq = log.as_conjunctive()
+    truth, _ = svc.serve_counts(cq)
+    epoch0 = svc._elastic.epoch
+    rc = ResilienceConfig(dispatch_timeout_s=1e9)
+    rep = replay(
+        svc,
+        log,
+        config=cfg,
+        mode="sealed",
+        faults=FaultSchedule.shard_loss(0, at=2),
+        resilience=rc,
+    )
+    s = rep.summary()
+    exact = int(np.array_equal(rep.counts, truth))
+    recovery = _degraded_window(rep.stats.batch_levels)
+    yield row(
+        "chaos/forum/shard_loss",
+        s["p50_ms"] / 1e3,
+        f"n_shards={n_shards};shards_after={svc.n_shards};"
+        f"evictions={svc._elastic.epoch - epoch0};"
+        f"recovery_batches={recovery};"
+        f"max_attempts={s['max_attempts']};exact={exact};"
+        f"p50_ms={s['p50_ms']:.3f};p99_ms={s['p99_ms']:.3f};"
+        f"batches={s['n_batches']};n={n_queries}",
+    )
+
+    # -- brownout: flood past the shed threshold, answer the rest -------
+    svc, log = fresh()
+    cq = log.as_conjunctive()
+    truth, _ = svc.serve_counts(cq)
+    rc = ResilienceConfig(dispatch_timeout_s=1e9, shed_queue_depth=500)
+    rep = replay(
+        svc,
+        log,
+        config=cfg,
+        mode="sealed",
+        faults=FaultSchedule.flood(at=3, depth=600, n_batches=3),
+        resilience=rc,
+    )
+    s = rep.summary()
+    shed = rep.counts == SHED
+    exact = int(np.array_equal(rep.counts[~shed], truth[~shed]))
+    p99_deg = rep.stats.percentile_ms(99, outcome="ok")
+    yield row(
+        "chaos/forum/brownout",
+        s["p50_ms"] / 1e3,
+        f"n_shards={n_shards};frac_shed={s['frac_shed']:.4f};"
+        f"n_shed={s['n_shed']};shed_batches={len(rep.stats.shed_batches)};"
+        f"p99_degraded_ms={p99_deg:.3f};exact={exact};"
+        f"batches={s['n_batches']};n={n_queries}",
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="quick sizes; write a chaos-only JSON artifact for CI",
+    )
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    print("name,us_per_call,derived")
+    rows = []
+    errors = []
+    t0 = time.time()
+    try:
+        for r in run(quick=quick):
+            print(r, flush=True)
+            rows.append(r)
+    except Exception as e:  # pragma: no cover
+        print(f"chaos/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        errors.append({"suite": "chaos", "error": f"{type(e).__name__}: {e}"})
+    total_s = time.time() - t0
+    print(f"# total {total_s:.0f}s", file=sys.stderr)
+
+    if args.smoke:
+        parsed = []
+        for r in rows:
+            parts = str(r).split(",", 2)
+            parsed.append(
+                {
+                    "name": parts[0],
+                    "us_per_call": float(parts[1]),
+                    "derived": parts[2] if len(parts) > 2 else "",
+                }
+            )
+        with open(args.out, "w") as f:
+            json.dump(
+                {
+                    "suites": ["chaos"],
+                    "quick": quick,
+                    "total_seconds": round(total_s, 2),
+                    "rows": parsed,
+                    "errors": errors,
+                },
+                f,
+                indent=2,
+            )
+        print(f"# wrote {args.out} ({len(parsed)} rows)", file=sys.stderr)
+        if errors:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

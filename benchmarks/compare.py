@@ -42,6 +42,18 @@ engine's 22x win.  This gate fails the benchmark job when
     (``compiles_steady=``, machine-independent: the shape-grid prewarm
     either covers the replay or it doesn't) must not exceed the
     baseline's (committed baselines carry 0);
+  * a ``chaos/*`` row's resilience story breaks: ``exact`` must be 1 on
+    every fresh chaos row (bit-identical answers under injected faults
+    are machine-independent — there is no tolerance on correctness);
+    ``recovery_batches`` (the degraded window after a shard loss) must
+    stay within the committed ``MAX_RECOVERY_BATCHES`` bound and must
+    not exceed the baseline's (the window is a pure function of the
+    schedule and the retry budget, so it transfers across machines);
+    ``frac_shed`` must not grow more than ``SHED_SLACK`` over the
+    baseline (sheds are composition-deterministic but the committed
+    slack absorbs batching drift); ``p99_degraded_ms`` — the p99 over
+    *answered* requests while faults are live — is an absolute latency
+    and gets the loose ``--max-serving-regression`` tolerance;
   * ANY row present in the baseline disappeared (a benchmark silently
     dropped is a hole in the trajectory, not a pass);
   * the fresh run recorded suite errors.
@@ -86,6 +98,10 @@ _P50_RE = re.compile(r"p50_ms=([0-9.]+)")
 _P99_RE = re.compile(r"p99_ms=([0-9.]+)")
 _QPS_RE = re.compile(r"qps_sustained=([0-9.]+)")
 _COMPILES_RE = re.compile(r"compiles_steady=(\d+)")
+_RECOVERY_RE = re.compile(r"recovery_batches=(\d+)")
+_FRAC_SHED_RE = re.compile(r"frac_shed=([0-9.]+)")
+_P99_DEG_RE = re.compile(r"p99_degraded_ms=([0-9.]+)")
+_EXACT_RE = re.compile(r"exact=(\d+)")
 # Committed scaling-efficiency floor at the largest shard count: the
 # posting-mass-balanced partition of the smoke corpus must keep at least
 # this fraction of perfect linear scaling at s=8 (fake CPU devices; the
@@ -97,6 +113,17 @@ MIN_SCALING_EFFICIENCY = 0.6
 # tolerated so timer noise on a ~0.95 baseline can't flake CI, anything
 # clearly above fails even inside the relative tolerance.
 _CROSS_GRACE = 1.02
+# Chaos gate: after an injected shard loss, the degraded window (batches
+# served above the "device" rung) must close within this many batches —
+# the committed bound on "failover is automatic and fast".  The default
+# retry budget (3) matches strikes_to_evict (3), so the committed run
+# recovers in 1 batch; the bound leaves room for policy tuning without
+# tolerating a tier that limps for a whole replay.
+MAX_RECOVERY_BATCHES = 4
+# Allowed absolute growth in the shed fraction over the baseline: sheds
+# are a deterministic function of the schedule and the batch plan, but
+# batching-policy changes legitimately move a boundary batch or two.
+SHED_SLACK = 0.15
 
 
 def load(path: str | Path) -> dict:
@@ -179,6 +206,30 @@ def serving_metrics(doc: dict) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def chaos_metrics(doc: dict) -> Dict[str, Dict[str, Optional[float]]]:
+    """``chaos/*`` row name -> {"recovery", "frac_shed", "p99_deg",
+    "exact"} (each None when the row does not carry that field — the
+    shard-loss row has no shed fraction, the brownout row no recovery
+    window; pre-chaos baselines contribute nothing)."""
+    out: Dict[str, Dict[str, Optional[float]]] = {}
+    for r in doc.get("rows", []):
+        name = r.get("name", "")
+        if not name.startswith("chaos/"):
+            continue
+        derived = r.get("derived", "")
+        mr = _RECOVERY_RE.search(derived)
+        ms = _FRAC_SHED_RE.search(derived)
+        mp = _P99_DEG_RE.search(derived)
+        me = _EXACT_RE.search(derived)
+        out[name] = {
+            "recovery": float(mr.group(1)) if mr else None,
+            "frac_shed": float(ms.group(1)) if ms else None,
+            "p99_deg": float(mp.group(1)) if mp else None,
+            "exact": float(me.group(1)) if me else None,
+        }
+    return out
+
+
 def row_names(doc: dict) -> set:
     return {r.get("name", "") for r in doc.get("rows", [])}
 
@@ -222,12 +273,15 @@ def compare(
     fails: List[str] = []
     base_sp = engine_speedups(baseline)
     fresh_sp = engine_speedups(fresh)
-    if not base_sp and not sharded_metrics(baseline) and not serving_metrics(
-        baseline
+    if (
+        not base_sp
+        and not sharded_metrics(baseline)
+        and not serving_metrics(baseline)
+        and not chaos_metrics(baseline)
     ):
         fails.append(
             "baseline has no gateable rows (batched_engine / sharded / "
-            "serving) — regenerate it"
+            "serving / chaos) — regenerate it"
         )
     for name, b in sorted(base_sp.items()):
         f = fresh_sp.get(name)
@@ -328,6 +382,58 @@ def compare(
                 f"{name}: steady-state jit compiles after prewarm "
                 f"({b['compiles']:.0f} -> {f['compiles']:.0f}) — the "
                 "shape-grid prewarm no longer covers the replay"
+            )
+    # Chaos-resilience gate.  Exactness is absolute: a chaos row that
+    # answered anything wrong fails regardless of what the baseline says
+    # — there is no tolerance on correctness.  The recovery window and
+    # shed fraction are schedule-deterministic (bounded absolutely and
+    # against the baseline); the degraded p99 is wall-clock and gets the
+    # loose serving tolerance.
+    base_ch = chaos_metrics(baseline)
+    fresh_ch = chaos_metrics(fresh)
+    for name, f in sorted(fresh_ch.items()):
+        if f["exact"] is not None and f["exact"] != 1.0:
+            fails.append(
+                f"{name}: non-shed responses diverged from the host "
+                "engine (exact=0) — resilience must never change answers"
+            )
+        if f["recovery"] is not None and f["recovery"] > MAX_RECOVERY_BATCHES:
+            fails.append(
+                f"{name}: recovery took {f['recovery']:.0f} batches "
+                f"(> committed bound {MAX_RECOVERY_BATCHES}) — failover "
+                "is no longer prompt"
+            )
+    for name, b in sorted(base_ch.items()):
+        f = fresh_ch.get(name)
+        if f is None:
+            continue  # the generic row-disappearance check reports it
+        if (
+            b["recovery"] is not None
+            and f["recovery"] is not None
+            and f["recovery"] > b["recovery"]
+        ):
+            fails.append(
+                f"{name}: recovery window grew {b['recovery']:.0f} -> "
+                f"{f['recovery']:.0f} batches over the baseline"
+            )
+        if (
+            b["frac_shed"] is not None
+            and f["frac_shed"] is not None
+            and f["frac_shed"] > b["frac_shed"] + SHED_SLACK
+        ):
+            fails.append(
+                f"{name}: shed fraction grew {b['frac_shed']:.3f} -> "
+                f"{f['frac_shed']:.3f} (> +{SHED_SLACK} over baseline)"
+            )
+        if (
+            b["p99_deg"] is not None
+            and f["p99_deg"] is not None
+            and f["p99_deg"] > b["p99_deg"] * (1.0 + max_serving_regression)
+        ):
+            fails.append(
+                f"{name}: degraded-path p99 regressed {b['p99_deg']:.2f}ms "
+                f"-> {f['p99_deg']:.2f}ms "
+                f"(> {max_serving_regression:.0%} growth)"
             )
     # ANY baseline row that vanished fails the gate — a benchmark
     # silently dropped is a hole in the perf trajectory, not a pass.
@@ -431,6 +537,31 @@ def write_step_summary(
                 f"{cell(f and f['qps'], '{:.0f}')} "
                 f"| {cell(b and b['compiles'], '{:.0f}')} → "
                 f"{cell(f and f['compiles'], '{:.0f}')} |"
+            )
+    base_ch = chaos_metrics(baseline)
+    fresh_ch = chaos_metrics(fresh)
+    if base_ch or fresh_ch:
+        lines += [
+            "",
+            "| chaos row | exact | recovery batches (base → fresh) "
+            "| frac shed (base → fresh) | degraded p99 ms (base → fresh) |",
+            "|---|---|---|---|---|",
+        ]
+        for name in sorted(set(base_ch) | set(fresh_ch)):
+            b, f = base_ch.get(name), fresh_ch.get(name)
+
+            def opt(d, key, fmt="{:.2f}"):
+                v = d.get(key) if d else None
+                return "–" if v is None else fmt.format(v)
+
+            lines.append(
+                f"| `{name}` "
+                f"| {opt(f, 'exact', '{:.0f}')} "
+                f"| {opt(b, 'recovery', '{:.0f}')} → "
+                f"{opt(f, 'recovery', '{:.0f}')} "
+                f"| {opt(b, 'frac_shed', '{:.3f}')} → "
+                f"{opt(f, 'frac_shed', '{:.3f}')} "
+                f"| {opt(b, 'p99_deg')} → {opt(f, 'p99_deg')} |"
             )
     bt = baseline.get("total_seconds", 0)
     ft = fresh.get("total_seconds", 0)
@@ -560,6 +691,22 @@ def main(argv: List[str] | None = None) -> int:
             f"{name}: p99 {_fmt(b, 'p99')}ms -> {_fmt(f, 'p99')}ms; "
             f"qps {_fmt(b, 'qps')} -> {_fmt(f, 'qps')}; "
             f"steady compiles {_fmt(b, 'compiles')} -> {_fmt(f, 'compiles')}"
+        )
+    base_ch = chaos_metrics(baseline)
+    fresh_ch = chaos_metrics(fresh)
+
+    def _opt(d, key):
+        v = d.get(key) if d else None
+        return "-" if v is None else f"{v:.2f}"
+
+    for name in sorted(set(base_ch) | set(fresh_ch)):
+        b = base_ch.get(name)
+        f = fresh_ch.get(name)
+        print(
+            f"{name}: exact {_opt(f, 'exact')}; recovery "
+            f"{_opt(b, 'recovery')} -> {_opt(f, 'recovery')}; frac_shed "
+            f"{_opt(b, 'frac_shed')} -> {_opt(f, 'frac_shed')}; "
+            f"degraded p99 {_opt(b, 'p99_deg')}ms -> {_opt(f, 'p99_deg')}ms"
         )
     print(
         f"wall-clock: baseline {baseline.get('total_seconds', 0)}s -> "

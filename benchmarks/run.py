@@ -22,7 +22,7 @@ import time
 # kernel row, one serving-replay row set.  The heavy sweeps (scaling,
 # datasets, roofline) stay out of the smoke path — CI budgets minutes,
 # not hours.
-SMOKE_SUITES = ("speedups", "compression", "kernels", "serving")
+SMOKE_SUITES = ("speedups", "compression", "kernels", "serving", "chaos")
 
 
 def main() -> None:
@@ -37,6 +37,7 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (
+        bench_chaos,
         bench_cluster_time,
         bench_comparison_cost,
         bench_compression,
@@ -59,6 +60,7 @@ def main() -> None:
         "comparison_cost": bench_comparison_cost,
         "kernels": bench_kernels,
         "serving": bench_serving,
+        "chaos": bench_chaos,
         "roofline": roofline_table,
     }
     print("name,us_per_call,derived")

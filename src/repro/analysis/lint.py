@@ -41,6 +41,15 @@ silently rotting, so they are linted as ASTs:
   callables at module level or behind ``functools.lru_cache`` (the
   engine's pattern) and let the loop prewarm them.
 
+* **SEC006** — resilience-defeating error handling in the fault-path
+  modules (``serve/*``, ``dist/*``): a bare ``except:``, an
+  ``except Exception:`` whose body only passes/continues, or a
+  ``while True:`` loop with no ``break``/``return``/``raise`` in its
+  own body.  The resilience ladder only degrades gracefully if every
+  failure is *observed* (fed to the circuit breaker / straggler
+  monitor) and every retry is *bounded*; swallowed exceptions and
+  unbounded retry loops turn a dead shard into a silent hang.
+
 ``lint_paths`` is the engine; ``tools/seclint.py`` is the CLI.  Rules
 are deliberately narrow: a finding is an invariant violation, not a
 style nit, and ``src/`` must stay finding-free (CI enforces it).
@@ -62,6 +71,8 @@ RULES = {
     "SEC003": "literal -1 sentinel instead of PAD/QUERY_PAD",
     "SEC004": "incomplete kernel contract (kernel + ref + ops + test)",
     "SEC005": "jit construction in the serving request path",
+    "SEC006": "resilience-defeating error handling (swallowed exception "
+    "or unbounded retry loop)",
 }
 
 # Modules whose traced code must never sync to host (SEC001).  Matched
@@ -76,6 +87,11 @@ DEVICE_PATH_PATTERNS = (
 # Serving modules whose function bodies must never construct jit
 # (SEC005): request-path code compiles at startup, not under traffic.
 SERVE_PATH_PATTERNS = ("*/serve/*.py",)
+
+# Fault-path modules where error handling must stay observable and
+# bounded (SEC006): the serving tier's resilience ladder and the
+# distributed fault-tolerance layer.
+RESILIENCE_PATH_PATTERNS = ("*/serve/*.py", "*/dist/*.py")
 
 # Data-plane modules where -1 must be spelled PAD/QUERY_PAD (SEC003).
 # analysis/ is excluded: the linter itself necessarily names -1.
@@ -704,6 +720,132 @@ def _check_sec005(scan: _ModuleScan, path: str) -> List[Finding]:
 
 
 # ----------------------------------------------------------------------
+# SEC006 — resilience-defeating error handling in fault-path modules
+# ----------------------------------------------------------------------
+
+_BROAD_EXC_NAMES = {"Exception", "BaseException"}
+
+
+def _is_broad_handler(handler: ast.ExceptHandler) -> bool:
+    """Bare ``except:`` or ``except Exception/BaseException`` (possibly
+    in a tuple)."""
+    t = handler.type
+    if t is None:
+        return True
+    types = t.elts if isinstance(t, ast.Tuple) else [t]
+    for typ in types:
+        name = typ.attr if isinstance(typ, ast.Attribute) else getattr(
+            typ, "id", ""
+        )
+        if name in _BROAD_EXC_NAMES:
+            return True
+    return False
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body does nothing but pass/continue — the
+    exception is silently discarded."""
+    return all(
+        isinstance(stmt, (ast.Pass, ast.Continue)) for stmt in handler.body
+    )
+
+
+def _loop_own_nodes(loop: ast.While) -> List[ast.AST]:
+    """Nodes of the loop body, excluding nested function/lambda subtrees
+    and nested loops' own break targets — a ``break`` inside an inner
+    ``for`` does not exit the outer ``while True``.  ``return``/``raise``
+    anywhere (outside nested defs) does exit, so those are collected from
+    the full non-def subtree."""
+    exits: List[ast.AST] = []
+
+    def collect(node: ast.AST, loop_depth: int):
+        if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        ):
+            return
+        if isinstance(node, ast.Break):
+            if loop_depth == 0:
+                exits.append(node)
+            return
+        if isinstance(node, (ast.Return, ast.Raise)):
+            exits.append(node)
+            return
+        child_depth = (
+            loop_depth + 1
+            if isinstance(node, (ast.For, ast.While, ast.AsyncFor))
+            else loop_depth
+        )
+        for child in ast.iter_child_nodes(node):
+            collect(child, child_depth)
+
+    for stmt in loop.body:
+        collect(stmt, 0)
+    return exits
+
+
+def _check_sec006(tree: ast.Module, path: str) -> List[Finding]:
+    """Flag error handling that defeats the resilience ladder:
+
+    * bare ``except:`` — catches ``KeyboardInterrupt``/``SystemExit`` and
+      hides *which* failure fired, so nothing upstream can count strikes;
+    * ``except Exception:`` (or broader) whose body only passes/continues
+      — the failure is observed by no one: no breaker strike, no
+      straggler record, no fallback level in the stats;
+    * ``while True:`` with no ``break``/``return``/``raise`` reachable in
+      its own body — an unbounded retry spin that turns a dead shard into
+      a hang instead of a degraded-but-answering service.  (A ``break``
+      belonging to a nested loop does not count; exits inside nested
+      ``def``/``lambda`` bodies do not count.)
+    """
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ExceptHandler):
+            if node.type is None:
+                findings.append(
+                    Finding(
+                        "SEC006",
+                        path,
+                        node.lineno,
+                        node.col_offset,
+                        "bare `except:` hides the failure from the "
+                        "resilience ladder — catch the typed error and "
+                        "feed the breaker/monitor",
+                    )
+                )
+            elif _is_broad_handler(node) and _swallows(node):
+                findings.append(
+                    Finding(
+                        "SEC006",
+                        path,
+                        node.lineno,
+                        node.col_offset,
+                        "`except Exception: pass/continue` swallows the "
+                        "failure — record it (breaker strike, shard "
+                        "times, fallback level) or re-raise",
+                    )
+                )
+        elif (
+            isinstance(node, ast.While)
+            and isinstance(node.test, ast.Constant)
+            and node.test.value is True
+            and not _loop_own_nodes(node)
+        ):
+            findings.append(
+                Finding(
+                    "SEC006",
+                    path,
+                    node.lineno,
+                    node.col_offset,
+                    "unbounded `while True:` retry loop with no "
+                    "break/return/raise — bound the attempts "
+                    "(for attempt in range(budget)) so a dead shard "
+                    "degrades instead of hanging",
+                )
+            )
+    return findings
+
+
+# ----------------------------------------------------------------------
 # SEC004 — kernel-contract completeness (directory-level rule)
 # ----------------------------------------------------------------------
 
@@ -781,8 +923,8 @@ def check_kernel_contracts(
 
 
 def lint_source(source: str, path: str) -> List[Finding]:
-    """Per-file rules (SEC001–SEC003, SEC005) over one module's source
-    text."""
+    """Per-file rules (SEC001–SEC003, SEC005, SEC006) over one module's
+    source text."""
     try:
         tree = ast.parse(source)
     except SyntaxError as exc:
@@ -800,6 +942,8 @@ def lint_source(source: str, path: str) -> List[Finding]:
         findings += _check_sec003(tree, path)
     if _matches(path, SERVE_PATH_PATTERNS):
         findings += _check_sec005(scan, path)
+    if _matches(path, RESILIENCE_PATH_PATTERNS):
+        findings += _check_sec006(tree, path)
     return findings
 
 

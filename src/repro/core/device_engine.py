@@ -625,6 +625,7 @@ def device_counts(
     plan=None,
     dindex: Optional[DeviceIndex] = None,
     return_docs: bool = False,
+    fault_hook=None,
 ):
     """Per-query result counts of a conjunctive batch, fully on device.
 
@@ -656,6 +657,12 @@ def device_counts(
         # metric — plan without the probe/scan accounting.
         plan = plan_segment_pairs(dindex.host, cq, track_work=False)
     t_plan = time.perf_counter() - t0
+    if fault_hook is not None:
+        # Injection point of the chaos harness (repro.serve.faults): a
+        # scheduled fault raises here, inside the real dispatch path —
+        # exactly where a device error would surface — so the resilience
+        # ladder is exercised without patching the engine in tests.
+        fault_hook.on_dispatch(n_shards=1)
     if plan.n_pairs == 0:
         counts = np.zeros(plan.n_queries, np.int64)
         info = {
@@ -1103,6 +1110,7 @@ def sharded_device_counts(
     plan=None,
     sidx: Optional[ShardedDeviceIndex] = None,
     return_docs: bool = False,
+    fault_hook=None,
 ):
     """Per-query result counts over the mesh-sharded corpus — one
     ``shard_map`` dispatch, counts combined with one psum.
@@ -1115,10 +1123,14 @@ def sharded_device_counts(
 
     ``info`` adds the sharding attribution: ``n_shards``,
     ``shards_touched`` (level-0 routing), ``shard_cells`` (true cells
-    per shard), ``agg_throughput`` (total true cells / max per-shard true
+    per shard), ``shard_times`` (per-shard dispatch seconds — what
+    ``SearchService.record_shard_times`` consumes for failover),
+    ``agg_throughput`` (total true cells / max per-shard true
     cells — the deterministic load-balance speedup bound) and
     ``load_balance`` (= agg_throughput / n_shards, the scaling
-    efficiency)."""
+    efficiency).  ``fault_hook`` is the chaos harness's injection point
+    (:mod:`repro.serve.faults`): called inside the dispatch path, where
+    it may raise scheduled faults and perturb ``shard_times``."""
     from repro.analysis.sanitize import jit_cache_size
     from repro.core.batched_query import plan_segment_pairs
 
@@ -1133,6 +1145,12 @@ def sharded_device_counts(
     if plan is None:
         plan = plan_segment_pairs(sidx.host, cq, track_work=False)
     t_plan = time.perf_counter() - t0
+    if fault_hook is not None:
+        # Chaos-harness injection point (repro.serve.faults): scheduled
+        # faults raise here, inside the real sharded dispatch path; the
+        # hook also watches n_shards to retire device-loss events once
+        # failover re-partitioned without the lost shard.
+        fault_hook.on_dispatch(n_shards=sidx.n_shards)
     if plan.n_pairs == 0:
         counts = np.zeros(plan.n_queries, np.int64)
         info = {
@@ -1141,6 +1159,7 @@ def sharded_device_counts(
             "n_shards": float(sidx.n_shards),
             "shards_touched": 0.0,
             "shard_cells": [0.0] * sidx.n_shards,
+            "shard_times": [0.0] * sidx.n_shards,
             "agg_throughput": 1.0,
             "load_balance": 1.0 / max(sidx.n_shards, 1),
             "padding_overhead": 1.0,
@@ -1191,12 +1210,22 @@ def sharded_device_counts(
     )
     total_true = float(lowered.n_cells_true.sum())
     max_true = float(lowered.n_cells_true.max())
+    # Per-shard dispatch times for the straggler monitor.  The fused
+    # shard_map is a synchronous collective — every shard runs the same
+    # unified-shape program and holds the device for the whole fold — so
+    # the honest per-shard attribution on a single-process rig is the
+    # fold time itself, equal across shards; a real straggler (or an
+    # injected one) shows up as that shard's entry inflating.
+    shard_times = np.full(lowered.n_shards, t_fold, np.float64)
+    if fault_hook is not None:
+        shard_times = fault_hook.perturb_shard_times(shard_times)
     info = {
         "n_pairs": float(plan.n_pairs),
         "n_kernel_calls": 1.0,
         "n_shards": float(lowered.n_shards),
         "shards_touched": float(lowered.shards_touched),
         "shard_cells": lowered.n_cells_true.astype(float).tolist(),
+        "shard_times": [float(x) for x in shard_times],
         "agg_throughput": total_true / max(max_true, 1.0),
         "load_balance": total_true
         / max(lowered.n_shards * max_true, 1.0),

@@ -25,7 +25,22 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Verdict", "StragglerMonitor", "plan_mesh_shape", "ElasticMesh"]
+__all__ = [
+    "Verdict",
+    "StragglerMonitor",
+    "plan_mesh_shape",
+    "ElasticMesh",
+    "NoDevicesError",
+]
+
+
+class NoDevicesError(RuntimeError):
+    """Eviction left no device to build a mesh from.
+
+    Raised by :meth:`ElasticMesh.remesh` when every pooled device is
+    excluded — the typed signal the serving tier's resilience layer
+    catches to drop to its host-fallback rung (an opaque numpy reshape
+    error here would kill the loop instead of degrading it)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,6 +187,11 @@ class ElasticMesh:
             if d.process_index not in self._excluded_hosts
             and d.id not in self._excluded_devices
         ]
+        if not devices:
+            raise NoDevicesError(
+                f"all {len(self._pool)} pooled devices are excluded — "
+                "no mesh can be built; serve on the host path"
+            )
         shape, axes = plan_mesh_shape(
             len(devices), self.model_parallel, self.prefer_pods
         )

@@ -128,9 +128,12 @@ class ServeStats:
     """Per-request and per-batch serving telemetry.
 
     Requests carry (enqueue, dispatch, reply) timestamps — latency is
-    reply minus enqueue, the number the SLO is written against.  Batches
-    carry size, queue depth at seal, device time, and the jit-cache
-    growth their dispatch caused (0 on every warm batch).
+    reply minus enqueue, the number the SLO is written against — plus a
+    per-request ``outcome`` ("ok" or "shed").  Batches carry size, queue
+    depth at seal, device time, the jit-cache growth their dispatch
+    caused (0 on every warm batch), and the resilience accounting:
+    dispatch ``attempts`` spent and the degradation ``level`` the batch
+    was served at (``repro.serve.resilience.LEVELS`` ladder).
     """
 
     def __init__(self, max_batch: int):
@@ -138,10 +141,14 @@ class ServeStats:
         self.t_enqueue: List[float] = []
         self.t_dispatch: List[float] = []
         self.t_reply: List[float] = []
+        self.outcomes: List[str] = []  # per request: "ok" | "shed"
         self.batch_sizes: List[int] = []
         self.batch_device_s: List[float] = []
         self.batch_compiles: List[int] = []
         self.queue_depths: List[int] = []
+        self.batch_attempts: List[int] = []
+        self.batch_levels: List[str] = []
+        self.shed_batches: List[int] = []  # sizes of refused seals
 
     def add_batch(
         self,
@@ -151,14 +158,36 @@ class ServeStats:
         device_s: float,
         jit_compiles: int,
         queue_depth: int,
+        attempts: int = 1,
+        level: str = "device",
     ) -> None:
         self.t_enqueue.extend(float(t) for t in t_enqueue)
         self.t_dispatch.extend([float(t_dispatch)] * len(t_enqueue))
         self.t_reply.extend([float(t_reply)] * len(t_enqueue))
+        self.outcomes.extend(["ok"] * len(t_enqueue))
         self.batch_sizes.append(len(t_enqueue))
         self.batch_device_s.append(float(device_s))
         self.batch_compiles.append(int(jit_compiles))
         self.queue_depths.append(int(queue_depth))
+        self.batch_attempts.append(int(attempts))
+        self.batch_levels.append(str(level))
+
+    def add_shed(
+        self, t_enqueue: Sequence[float], t_reply: float, queue_depth: int
+    ) -> None:
+        """Record requests refused with the typed SHED error: replied
+        immediately (the whole point of shedding), never dispatched.
+        Shed requests stay out of the per-batch dispatch accounting —
+        those lists describe work the device actually did."""
+        self.t_enqueue.extend(float(t) for t in t_enqueue)
+        self.t_dispatch.extend([float(t_reply)] * len(t_enqueue))
+        self.t_reply.extend([float(t_reply)] * len(t_enqueue))
+        self.outcomes.extend(["shed"] * len(t_enqueue))
+        self.shed_batches.append(len(t_enqueue))
+
+    @property
+    def n_shed(self) -> int:
+        return sum(self.shed_batches)
 
     @property
     def n_requests(self) -> int:
@@ -168,13 +197,17 @@ class ServeStats:
     def n_batches(self) -> int:
         return len(self.batch_sizes)
 
-    def latencies_s(self) -> np.ndarray:
-        return np.asarray(self.t_reply, np.float64) - np.asarray(
+    def latencies_s(self, outcome: Optional[str] = None) -> np.ndarray:
+        lat = np.asarray(self.t_reply, np.float64) - np.asarray(
             self.t_enqueue, np.float64
         )
+        if outcome is None:
+            return lat
+        mask = np.asarray([o == outcome for o in self.outcomes], bool)
+        return lat[mask]
 
-    def percentile_ms(self, p: float) -> float:
-        lat = self.latencies_s()
+    def percentile_ms(self, p: float, outcome: Optional[str] = None) -> float:
+        lat = self.latencies_s(outcome)
         if len(lat) == 0:
             return 0.0
         return float(np.percentile(lat, p) * 1e3)
@@ -200,22 +233,42 @@ class ServeStats:
                 "max_queue_depth": 0,
                 "jit_compiles": 0,
                 "batch_hist": {},
+                "n_shed": 0,
+                "frac_shed": 0.0,
+                "levels": {},
+                "max_attempts": 0,
             }
         duration = max(max(self.t_reply) - min(self.t_enqueue), 1e-12)
-        mean_batch = float(np.mean(self.batch_sizes))
+        # Latency percentiles describe answered requests; a shed reply is
+        # a refusal, not a fast answer, and must not deflate the p50.
+        pct = "ok" if self.n_shed else None
+        levels: Dict[str, int] = {}
+        for lv in self.batch_levels:
+            levels[lv] = levels.get(lv, 0) + 1
+        if self.shed_batches:
+            levels["shed"] = len(self.shed_batches)
+        mean_batch = (
+            float(np.mean(self.batch_sizes)) if self.batch_sizes else 0.0
+        )
         return {
             "n_requests": self.n_requests,
             "n_batches": self.n_batches,
             "duration_s": duration,
             "qps_sustained": self.n_requests / duration,
-            "p50_ms": self.percentile_ms(50),
-            "p99_ms": self.percentile_ms(99),
-            "p999_ms": self.percentile_ms(99.9),
+            "p50_ms": self.percentile_ms(50, pct),
+            "p99_ms": self.percentile_ms(99, pct),
+            "p999_ms": self.percentile_ms(99.9, pct),
             "mean_batch": mean_batch,
             "occupancy": mean_batch / self.max_batch,
-            "max_queue_depth": int(max(self.queue_depths)),
+            "max_queue_depth": (
+                int(max(self.queue_depths)) if self.queue_depths else 0
+            ),
             "jit_compiles": int(sum(self.batch_compiles)),
             "batch_hist": self.batch_hist(),
+            "n_shed": self.n_shed,
+            "frac_shed": self.n_shed / self.n_requests,
+            "levels": levels,
+            "max_attempts": max(self.batch_attempts, default=0),
         }
 
 
@@ -233,6 +286,14 @@ class AsyncServingLoop:
     entry that serves through the mesh-sharded fold after
     ``enable_sharded``.  ``cache_probe`` defaults to the fused fold's
     compiled-entry count and feeds the per-batch jit accounting.
+
+    ``resilience`` (a :class:`repro.serve.resilience.ResilienceConfig`)
+    arms the degradation ladder: each sealed batch dispatches through a
+    ``ResilientDispatcher`` (timeout + bounded retry + breaker + exact
+    host fallback) and ``submit`` sheds with a typed ``ShedError`` once
+    queue depth passes ``shed_queue_depth``.  ``faults`` (a
+    :class:`repro.serve.faults.FaultSchedule` or ``FaultInjector``)
+    installs the chaos harness into the service's dispatch path.
     """
 
     def __init__(
@@ -241,6 +302,8 @@ class AsyncServingLoop:
         config: Optional[ServeConfig] = None,
         engine=None,
         cache_probe=None,
+        resilience=None,
+        faults=None,
     ):
         if engine is None:
             if service is None:
@@ -257,6 +320,32 @@ class AsyncServingLoop:
         self._wake: Optional[asyncio.Event] = None
         self._task: Optional[asyncio.Task] = None
         self._closing = False
+        self.resilience = resilience
+        self._injector = None
+        self._dispatcher = None
+        if faults is not None:
+            from repro.serve.faults import FaultInjector
+
+            self._injector = (
+                faults
+                if isinstance(faults, FaultInjector)
+                else FaultInjector(faults)
+            )
+            if service is not None:
+                service.install_faults(self._injector)
+        if resilience is not None or self._injector is not None:
+            from repro.serve.resilience import (
+                ResilienceConfig,
+                ResilientDispatcher,
+            )
+
+            self.resilience = resilience or ResilienceConfig()
+            self._dispatcher = ResilientDispatcher(
+                service,
+                self.resilience,
+                engine=engine,
+                injector=self._injector,
+            )
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -279,9 +368,24 @@ class AsyncServingLoop:
     # -- request entry -----------------------------------------------------
 
     async def submit(self, terms: Sequence[int]) -> int:
-        """Enqueue one conjunctive query; resolves to its result count."""
+        """Enqueue one conjunctive query; resolves to its result count.
+
+        With a resilience policy armed, arrivals past the brownout
+        queue depth are refused immediately with a typed
+        ``ShedError`` — the explicit load-shedding rung."""
         if self._task is None:
             raise RuntimeError("serving loop not started")
+        limit = getattr(self.resilience, "shed_queue_depth", None)
+        if limit is not None:
+            depth = len(self._pending)
+            if self._injector is not None:
+                depth += self._injector.extra_queue_depth()
+            if depth >= limit:
+                from repro.serve.resilience import ShedError
+
+                t = time.perf_counter()
+                self.stats.add_shed([t], t, depth)
+                raise ShedError(depth, limit)
         fut = asyncio.get_running_loop().create_future()
         self._pending.append(
             ([int(t) for t in terms], fut, time.perf_counter())
@@ -374,8 +478,15 @@ class AsyncServingLoop:
         depth = len(self._pending)  # what the dispatch leaves queued
         before = self._probe()
         t_d = time.perf_counter()
-        out = self._engine(cq)
-        counts = np.asarray(out[0] if isinstance(out, tuple) else out)
+        if self._dispatcher is not None:
+            if self._injector is not None:
+                self._injector.begin_batch()
+            counts, _info, outcome = self._dispatcher.dispatch(cq)
+            attempts, level = outcome.attempts, outcome.level
+        else:
+            out = self._engine(cq)
+            counts = np.asarray(out[0] if isinstance(out, tuple) else out)
+            attempts, level = 1, "device"
         t_r = time.perf_counter()
         self.stats.add_batch(
             t_enq,
@@ -384,6 +495,8 @@ class AsyncServingLoop:
             device_s=t_r - t_d,
             jit_compiles=self._probe() - before,
             queue_depth=depth,
+            attempts=attempts,
+            level=level,
         )
         for fut, c in zip(futs, counts, strict=True):
             if not fut.done():

@@ -82,6 +82,8 @@ def replay(
     seed: int = 0,
     engine=None,
     cache_probe=None,
+    faults=None,
+    resilience=None,
 ) -> ReplayReport:
     """Replay a query log's traffic through the deadline batcher.
 
@@ -90,6 +92,17 @@ def replay(
     ``engine`` overrides ``service.serve_counts_device`` (tests inject
     counting shims); ``cache_probe`` overrides the fused fold's
     compiled-entry counter.
+
+    ``faults`` (a :class:`repro.serve.faults.FaultSchedule`) turns the
+    run into a *chaos replay*: the schedule's failures fire inside the
+    real dispatch path and the batches serve through the resilience
+    ladder (``resilience`` — a ``ResilienceConfig`` — defaults apply
+    when omitted).  Shed requests reply with the ``SHED`` sentinel in
+    ``counts`` and outcome ``"shed"`` in the stats; every non-shed count
+    stays bit-identical to the host engine.  Batch composition and
+    fault firing are both pure functions of the arrivals and the
+    schedule, so the same seed + schedule reproduces the same
+    ``ServeStats`` outcome/attempt/level records exactly.
     """
     if log.arrivals is not None:
         arrivals = np.asarray(log.arrivals, np.float64)
@@ -105,37 +118,114 @@ def replay(
     if cache_probe is None:
         from repro.core.device_engine import fold_cache_size as cache_probe
     if mode == "sealed":
-        return _replay_sealed(engine, log, arrivals, cfg, cache_probe)
+        return _replay_sealed(
+            engine,
+            log,
+            arrivals,
+            cfg,
+            cache_probe,
+            service=service,
+            faults=faults,
+            resilience=resilience,
+        )
     if mode == "async":
         return asyncio.run(
-            _replay_async(service, engine, log, arrivals, cfg, cache_probe)
+            _replay_async(
+                service,
+                engine,
+                log,
+                arrivals,
+                cfg,
+                cache_probe,
+                faults=faults,
+                resilience=resilience,
+            )
         )
     raise ValueError(f"unknown replay mode {mode!r} (sealed|async)")
 
 
-def _replay_sealed(engine, log, arrivals, cfg, probe) -> ReplayReport:
+def _replay_sealed(
+    engine,
+    log,
+    arrivals,
+    cfg,
+    probe,
+    service=None,
+    faults=None,
+    resilience=None,
+) -> ReplayReport:
+    injector = None
+    dispatcher = None
+    rcfg = None
+    if faults is not None:
+        from repro.serve.faults import FaultInjector
+
+        injector = (
+            faults if isinstance(faults, FaultInjector) else FaultInjector(faults)
+        )
+    if resilience is not None or injector is not None:
+        from repro.serve.resilience import ResilienceConfig, ResilientDispatcher
+
+        rcfg = resilience or ResilienceConfig()
+        dispatcher = ResilientDispatcher(
+            service, rcfg, engine=engine, injector=injector
+        )
+    if injector is not None and service is not None:
+        service.install_faults(injector)
+    try:
+        return _sealed_loop(
+            engine, log, arrivals, cfg, probe, injector, dispatcher, rcfg
+        )
+    finally:
+        if injector is not None and service is not None:
+            service.install_faults(None)
+
+
+def _sealed_loop(
+    engine, log, arrivals, cfg, probe, injector, dispatcher, rcfg
+) -> ReplayReport:
+    from repro.serve.faults import SHED
+
     batches = plan_batches(arrivals, cfg.max_batch, cfg.deadline_s)
     seals = seal_times(arrivals, batches, cfg.max_batch, cfg.deadline_s)
     stats = ServeStats(cfg.max_batch)
     counts_all = np.zeros(log.n_queries, np.int64)
     cache_start = probe()
     device_free = 0.0
+    shed_limit = rcfg.shed_queue_depth if rcfg is not None else None
     for (i, j), t_seal in zip(batches, seals, strict=True):
-        before = probe()
-        t0 = time.perf_counter()
-        out = engine(log.queries[i:j])
-        counts = np.asarray(out[0] if isinstance(out, tuple) else out)
-        service_s = time.perf_counter() - t0
-        counts_all[i:j] = counts
         # Single-server queue on the virtual clock: the batch cannot
         # dispatch before it seals nor before the device frees up.
         dispatch = max(float(t_seal), device_free)
-        reply = dispatch + service_s
-        device_free = reply
-        # Requests arrived but not yet sealed at dispatch time.
+        # Requests arrived but not yet sealed at dispatch time, plus any
+        # phantom backlog an active queue-flood fault injects.
         depth = int(
             max(0, np.searchsorted(arrivals, dispatch, side="right") - j)
         )
+        if injector is not None:
+            injector.begin_batch()
+            depth += injector.extra_queue_depth()
+        if shed_limit is not None and depth >= shed_limit:
+            # Brownout: refuse the whole sealed batch immediately with
+            # the SHED sentinel — the device stays free to drain the
+            # backlog instead of queueing work it cannot answer in SLO.
+            counts_all[i:j] = SHED
+            stats.add_shed(arrivals[i:j], dispatch, depth)
+            continue
+        before = probe()
+        t0 = time.perf_counter()
+        if dispatcher is not None:
+            counts, _info, outcome = dispatcher.dispatch(log.queries[i:j])
+            attempts, level = outcome.attempts, outcome.level
+            extra_s = outcome.delay_s
+        else:
+            out = engine(log.queries[i:j])
+            counts = np.asarray(out[0] if isinstance(out, tuple) else out)
+            attempts, level, extra_s = 1, "device", 0.0
+        service_s = time.perf_counter() - t0 + extra_s
+        counts_all[i:j] = counts
+        reply = dispatch + service_s
+        device_free = reply
         stats.add_batch(
             arrivals[i:j],
             dispatch,
@@ -143,6 +233,8 @@ def _replay_sealed(engine, log, arrivals, cfg, probe) -> ReplayReport:
             device_s=service_s,
             jit_compiles=probe() - before,
             queue_depth=depth,
+            attempts=attempts,
+            level=level,
         )
     return ReplayReport(
         counts=counts_all,
@@ -155,10 +247,18 @@ def _replay_sealed(engine, log, arrivals, cfg, probe) -> ReplayReport:
 
 
 async def _replay_async(
-    service, engine, log, arrivals, cfg, probe
+    service, engine, log, arrivals, cfg, probe, faults=None, resilience=None
 ) -> ReplayReport:
+    from repro.serve.faults import SHED
+    from repro.serve.resilience import ShedError
+
     loop = AsyncServingLoop(
-        service, cfg, engine=engine, cache_probe=probe
+        service,
+        cfg,
+        engine=engine,
+        cache_probe=probe,
+        resilience=resilience,
+        faults=faults,
     )
     cache_start = probe()
     await loop.start()
@@ -167,7 +267,10 @@ async def _replay_async(
 
     async def one(r: int) -> int:
         await asyncio.sleep(float(arrivals[r] - t0))
-        return await loop.submit(cq.terms(r))
+        try:
+            return await loop.submit(cq.terms(r))
+        except ShedError:
+            return int(SHED)
 
     counts = await asyncio.gather(
         *(one(r) for r in range(log.n_queries))

@@ -83,6 +83,7 @@ class SearchService:
         self._sharded = None  # ShardedDeviceIndex once enable_sharded ran
         self._elastic = None  # ElasticMesh owning the serving device pool
         self._monitor = None  # StragglerMonitor over the shards
+        self._faults = None  # FaultInjector threaded into the engines
 
     @property
     def query_index(self):
@@ -137,17 +138,37 @@ class SearchService:
         from repro.core.device_engine import device_counts, sharded_device_counts
 
         if self._sharded is not None:
-            return sharded_device_counts(
+            out = sharded_device_counts(
                 self.query_index,
                 queries,
                 sidx=self._sharded,
                 return_docs=return_docs,
+                fault_hook=self._faults,
             )
+            # Failover is fed from the serving path itself: every sharded
+            # dispatch reports its per-shard times to the straggler
+            # monitor, so a persistently slow shard is evicted and the
+            # corpus re-partitioned with no manual record_shard_times
+            # call.  Empty-plan batches (no device work, all-zero times)
+            # are skipped — a dead batch says nothing about shard health
+            # and must not reset a straggler's consecutive strikes.
+            info = out[-1]
+            times = info.get("shard_times")
+            if (
+                self._monitor is not None
+                and times is not None
+                and info.get("n_kernel_calls", 0.0)
+                and len(times) == self._monitor.n_hosts
+            ):
+                _verdicts, remeshed = self.record_shard_times(times)
+                info["remeshed"] = remeshed
+            return out
         return device_counts(
             self.query_index,
             queries,
             dindex=self.device_index,
             return_docs=return_docs,
+            fault_hook=self._faults,
         )
 
     # -- async serving loop -----------------------------------------------
@@ -169,6 +190,17 @@ class SearchService:
         return AsyncServingLoop(
             self, config or ServeConfig(**config_kwargs)
         )
+
+    # -- fault injection (chaos harness) -----------------------------------
+
+    def install_faults(self, injector):
+        """Thread a :class:`repro.serve.faults.FaultInjector` into this
+        service's device dispatch paths (``None`` uninstalls).  Scheduled
+        faults then fire inside ``device_counts`` /
+        ``sharded_device_counts`` — the real dispatch path, not a test
+        shim.  Returns the injector for chaining."""
+        self._faults = injector
+        return injector
 
     # -- sharded serving + failover ---------------------------------------
 

@@ -93,5 +93,18 @@ def small_view(small_corpus, small_p):
 
 
 @pytest.fixture(scope="session")
+def small_seclud(small_corpus, small_log):
+    """One fitted SeCluD pipeline shared by the serving-tier suites
+    (the fit is the expensive part; SearchService instances built on it
+    per-test stay independent — serving state lives on the service)."""
+    from repro.core.seclud import SecludPipeline
+
+    pipe = SecludPipeline(tc=800, doc_grained_below=256, seed=0)
+    return pipe.fit(
+        small_corpus, k=8, algo="topdown", log=small_log, levels=2
+    )
+
+
+@pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

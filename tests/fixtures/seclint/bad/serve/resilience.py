@@ -1,0 +1,29 @@
+"""Bad fixture: resilience-defeating error handling (SEC006)."""
+
+
+def dispatch_forever(engine, batch):
+    # BAD: unbounded retry spin — no break/return/raise in the loop's
+    # own body, so a dead shard hangs the serving loop forever instead
+    # of degrading to the host path.
+    results = []
+    while True:
+        out = engine(batch)
+        results.append(out)
+
+
+def swallow(engine, batch):
+    for attempt in range(3):
+        try:
+            return engine(batch)
+        except Exception:
+            # BAD: the failure is observed by no one — no breaker
+            # strike, no shard-time record, no fallback level.
+            continue
+    return None
+
+
+def hide_everything(engine, batch):
+    try:
+        return engine(batch)
+    except:  # noqa: E722  BAD: bare except hides which failure fired
+        pass

@@ -4,6 +4,9 @@ slowdown (and stay quiet on healthy runs)."""
 import json
 
 from benchmarks.compare import (
+    MAX_RECOVERY_BATCHES,
+    SHED_SLACK,
+    chaos_metrics,
     compare,
     engine_device_ratios,
     engine_speedups,
@@ -498,6 +501,152 @@ def test_step_summary_includes_serving_table(tmp_path):
     assert "## Perf gate: ❌ FAILED" in md
 
 
+def _with_chaos(doc, loss=None, brownout=None):
+    """Append chaos rows in the bench_chaos derived format.  ``loss`` is
+    (recovery_batches, exact), ``brownout`` is (frac_shed, p99_deg_ms,
+    exact)."""
+    if loss is not None:
+        recovery, exact = loss
+        doc["rows"].append(
+            {
+                "name": "chaos/forum/shard_loss",
+                "us_per_call": 9000.0,
+                "derived": f"n_shards=4;shards_after=3;evictions=1;"
+                f"recovery_batches={recovery};max_attempts=4;exact={exact};"
+                f"p50_ms=9.0;p99_ms=40.0;batches=7;n=400",
+            }
+        )
+    if brownout is not None:
+        frac, p99d, exact = brownout
+        doc["rows"].append(
+            {
+                "name": "chaos/forum/brownout",
+                "us_per_call": 9000.0,
+                "derived": f"n_shards=4;frac_shed={frac:.4f};n_shed=20;"
+                f"shed_batches=3;p99_degraded_ms={p99d:.3f};exact={exact};"
+                f"batches=7;n=400",
+            }
+        )
+    return doc
+
+
+HEALTHY_LOSS = (1, 1)  # recovers in one batch, every answer exact
+HEALTHY_BROWNOUT = (0.05, 12.0, 1)
+
+
+def test_chaos_metrics_parses_rows():
+    doc = _with_chaos(_doc(BASE), loss=HEALTHY_LOSS, brownout=HEALTHY_BROWNOUT)
+    got = chaos_metrics(doc)
+    assert set(got) == {"chaos/forum/shard_loss", "chaos/forum/brownout"}
+    # fields a row does not carry parse to None, not 0
+    assert got["chaos/forum/shard_loss"] == {
+        "recovery": 1.0, "frac_shed": None, "p99_deg": None, "exact": 1.0
+    }
+    assert got["chaos/forum/brownout"] == {
+        "recovery": None, "frac_shed": 0.05, "p99_deg": 12.0, "exact": 1.0
+    }
+    assert chaos_metrics(_doc(BASE)) == {}  # pre-chaos baseline
+
+
+def test_chaos_gate_passes_on_healthy_run():
+    base = _with_chaos(_doc(BASE), loss=HEALTHY_LOSS,
+                       brownout=HEALTHY_BROWNOUT)
+    fresh = _with_chaos(_doc(BASE), loss=HEALTHY_LOSS,
+                        brownout=HEALTHY_BROWNOUT)
+    assert compare(base, fresh) == []
+    # shed drift inside the committed slack passes
+    drift = (0.05 + SHED_SLACK - 0.01, 12.0, 1)
+    assert compare(base, _with_chaos(_doc(BASE), loss=HEALTHY_LOSS,
+                                     brownout=drift)) == []
+
+
+def test_chaos_gate_trips_on_inexact_answers():
+    """The acceptance criterion: a chaos row answering anything wrong
+    fails absolutely — even against a pre-chaos baseline, and under any
+    latency tolerance."""
+    wrong = _with_chaos(_doc(BASE), loss=(1, 0))
+    fails = compare(_doc(BASE), wrong, max_serving_regression=100.0)
+    assert len(fails) == 1
+    assert "shard_loss" in fails[0] and "diverged" in fails[0]
+    wrong_shed = _with_chaos(_doc(BASE), brownout=(0.05, 12.0, 0))
+    fails = compare(_doc(BASE), wrong_shed)
+    assert any("brownout" in m and "diverged" in m for m in fails)
+
+
+def test_chaos_gate_trips_on_recovery_bound():
+    """Failover slower than the committed absolute bound fails, baseline
+    or not."""
+    limping = _with_chaos(_doc(BASE), loss=(MAX_RECOVERY_BATCHES + 1, 1))
+    fails = compare(_doc(BASE), limping)
+    assert len(fails) == 1
+    assert "recovery took" in fails[0] and "no longer prompt" in fails[0]
+
+
+def test_chaos_gate_trips_on_recovery_growth_over_baseline():
+    """Inside the absolute bound, growing the degraded window over the
+    committed run still fails — the window is schedule-deterministic."""
+    base = _with_chaos(_doc(BASE), loss=(1, 1))
+    slower = _with_chaos(_doc(BASE), loss=(3, 1))  # 3 <= bound of 4
+    fails = compare(base, slower)
+    assert len(fails) == 1
+    assert "recovery window grew 1 -> 3" in fails[0]
+
+
+def test_chaos_gate_trips_on_shed_fraction_growth():
+    base = _with_chaos(_doc(BASE), brownout=HEALTHY_BROWNOUT)
+    greedy = _with_chaos(
+        _doc(BASE), brownout=(0.05 + SHED_SLACK + 0.05, 12.0, 1)
+    )
+    fails = compare(base, greedy)
+    assert len(fails) == 1
+    assert "shed fraction grew" in fails[0]
+
+
+def test_chaos_gate_trips_on_degraded_p99_regression():
+    base = _with_chaos(_doc(BASE), brownout=HEALTHY_BROWNOUT)
+    slow = _with_chaos(_doc(BASE), brownout=(0.05, 12.0 * 4.0, 1))
+    fails = compare(base, slow)
+    assert len(fails) == 1
+    assert "degraded-path p99 regressed" in fails[0]
+    # the loose cross-hardware tolerance flag reaches this gate too
+    assert compare(base, slow, max_serving_regression=5.0) == []
+
+
+def test_chaos_rows_new_in_fresh_warn_not_fail():
+    """A PR introducing the chaos bench against a pre-chaos baseline must
+    stay green (warn + re-baseline) — but only while the new rows are
+    healthy; the absolute checks still apply."""
+    warnings = []
+    fails = compare(
+        _doc(BASE),
+        _with_chaos(_doc(BASE), loss=HEALTHY_LOSS,
+                    brownout=HEALTHY_BROWNOUT),
+        warnings=warnings,
+    )
+    assert fails == []
+    assert any("not in the baseline" in w for w in warnings)
+
+
+def test_chaos_row_disappearance_fails():
+    base = _with_chaos(_doc(BASE), loss=HEALTHY_LOSS,
+                       brownout=HEALTHY_BROWNOUT)
+    fails = compare(base, _with_chaos(_doc(BASE), loss=HEALTHY_LOSS))
+    assert len(fails) == 1
+    assert "brownout" in fails[0] and "disappeared" in fails[0]
+
+
+def test_step_summary_includes_chaos_table():
+    base = _with_chaos(_doc(BASE), loss=HEALTHY_LOSS,
+                       brownout=HEALTHY_BROWNOUT)
+    fresh = _with_chaos(_doc(BASE), loss=(MAX_RECOVERY_BATCHES + 2, 1),
+                        brownout=HEALTHY_BROWNOUT)
+    fails = compare(base, fresh)
+    md = write_step_summary(base, fresh, fails, [])
+    assert "| chaos row |" in md
+    assert "| `chaos/forum/shard_loss` |" in md
+    assert "## Perf gate: ❌ FAILED" in md
+
+
 def test_repo_baseline_is_committed_and_gateable():
     """The committed baseline must contain every batched_engine row the
     smoke suite produces (arity 2, 3, 5)."""
@@ -544,3 +693,15 @@ def test_repo_baseline_is_committed_and_gateable():
     assert all(n.startswith("serving/forum/replay/r") for n in srv), srv
     assert all(m["compiles"] == 0 for m in srv.values()), srv
     assert all(m["p99"] > 0 and m["qps"] > 0 for m in srv.values()), srv
+    # Chaos rows are baselined with exact=1 everywhere and a recovery
+    # window inside the committed bound — the resilience gate judges a
+    # committed run that actually survived its faults.
+    ch = chaos_metrics(doc)
+    assert set(ch) == {"chaos/forum/shard_loss", "chaos/forum/brownout"}, ch
+    assert all(m["exact"] == 1.0 for m in ch.values()), ch
+    loss = ch["chaos/forum/shard_loss"]
+    assert loss["recovery"] is not None
+    assert 0 < loss["recovery"] <= MAX_RECOVERY_BATCHES, loss
+    brown = ch["chaos/forum/brownout"]
+    assert brown["frac_shed"] is not None and brown["frac_shed"] > 0, brown
+    assert brown["p99_deg"] is not None and brown["p99_deg"] > 0, brown

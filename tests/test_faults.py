@@ -1,0 +1,218 @@
+"""Fault-injection layer: schedules are pure descriptions, the injector
+interprets them deterministically, and the hook rides inside the real
+engine dispatch (``fault_hook``) without changing any result."""
+
+import numpy as np
+import pytest
+
+from repro.serve.faults import (
+    SHED,
+    DeviceLostError,
+    FaultEvent,
+    FaultInjector,
+    FaultSchedule,
+    InjectedFault,
+)
+
+# ----------------------------------------------------------------------
+# FaultEvent / FaultSchedule — validation and windows
+# ----------------------------------------------------------------------
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meteor_strike", at=0)
+    with pytest.raises(ValueError, match="ordinal"):
+        FaultEvent("exception", at=-1)
+    with pytest.raises(ValueError, match="n_batches"):
+        FaultEvent("exception", at=0, n_batches=0)
+    with pytest.raises(ValueError, match="factor"):
+        FaultEvent("slowdown", at=0, factor=0.0)
+
+
+def test_event_active_window():
+    ev = FaultEvent("exception", at=3, n_batches=2)
+    assert [ev.active_at(b) for b in range(6)] == [
+        False, False, False, True, True, False,
+    ]
+    # n_batches=None: active forever (until a remesh consumes it)
+    forever = FaultEvent("device_loss", at=2, n_batches=None, shard=0)
+    assert not forever.active_at(1)
+    assert forever.active_at(2) and forever.active_at(10_000)
+
+
+def test_canonical_scenarios():
+    loss = FaultSchedule.shard_loss(2, at=5)
+    (ev,) = loss.events
+    assert ev.kind == "device_loss" and ev.shard == 2
+    assert ev.at == 5 and ev.n_batches is None
+
+    slow = FaultSchedule.shard_slowdown(1, at=0, factor=25.0)
+    assert slow.events[0].kind == "slowdown"
+    assert slow.events[0].factor == 25.0
+
+    flaky = FaultSchedule.flaky(at=3, n_attempts=1)
+    assert flaky.events[0].kind == "exception"
+    assert flaky.events[0].n_attempts == 1
+
+    flood = FaultSchedule.flood(at=4, depth=100, n_batches=2)
+    assert flood.events[0].depth == 100
+
+
+def test_chaos_is_seed_deterministic():
+    a = FaultSchedule.chaos(seed=42, n_batches=50, n_events=6, n_shards=4)
+    b = FaultSchedule.chaos(seed=42, n_batches=50, n_events=6, n_shards=4)
+    c = FaultSchedule.chaos(seed=43, n_batches=50, n_events=6, n_shards=4)
+    assert a.events == b.events  # frozen dataclass equality, field for field
+    assert a.events != c.events
+    # device loss is one-way and deliberately excluded from random mixes
+    assert all(ev.kind != "device_loss" for ev in a.events)
+    assert len(a.events) == 6
+
+
+# ----------------------------------------------------------------------
+# FaultInjector — batch/attempt bookkeeping
+# ----------------------------------------------------------------------
+
+
+def test_injector_attempt_window():
+    # n_attempts=1: the first dispatch of each active batch fails, the
+    # retry sails through — exactly one retry per affected batch.
+    inj = FaultInjector(FaultSchedule.flaky(at=1, n_batches=2, n_attempts=1))
+    inj.begin_batch()  # batch 0: clean
+    inj.on_dispatch()
+    inj.begin_batch()  # batch 1: first attempt raises, second passes
+    with pytest.raises(InjectedFault):
+        inj.on_dispatch()
+    inj.on_dispatch()
+    inj.begin_batch()  # batch 2: same again
+    with pytest.raises(InjectedFault):
+        inj.on_dispatch()
+    inj.on_dispatch()
+    inj.begin_batch()  # batch 3: window expired
+    inj.on_dispatch()
+    assert [f[:2] for f in inj.fired] == [(1, 0), (2, 0)]
+
+
+def test_injector_flood_window():
+    inj = FaultInjector(FaultSchedule.flood(at=2, depth=64, n_batches=2))
+    depths = []
+    for _ in range(5):
+        inj.begin_batch()
+        depths.append(inj.extra_queue_depth())
+    assert depths == [0, 0, 64, 64, 0]
+
+
+def test_injector_slowdown_perturbs_and_delays():
+    inj = FaultInjector(
+        FaultSchedule.shard_slowdown(1, at=0, factor=8.0, delay_s=0.25)
+    )
+    inj.begin_batch()
+    inj.on_dispatch(n_shards=4)
+    times = inj.perturb_shard_times([1.0, 1.0, 1.0, 1.0])
+    np.testing.assert_allclose(times, [1.0, 8.0, 1.0, 1.0])
+    assert inj.take_delay() == pytest.approx(0.25)
+    assert inj.take_delay() == 0.0  # drained
+
+
+def test_device_loss_persists_until_remesh():
+    inj = FaultInjector(FaultSchedule.shard_loss(1, at=0))
+    for _ in range(3):  # keeps failing, batch after batch
+        inj.begin_batch()
+        with pytest.raises(DeviceLostError) as exc:
+            inj.on_dispatch(n_shards=4)
+        assert exc.value.shard == 1
+    # failover shrank the mesh: the event is consumed, dispatches pass
+    inj.begin_batch()
+    inj.on_dispatch(n_shards=3)
+    inj.on_dispatch(n_shards=3)
+    assert inj.extra_queue_depth() == 0
+
+
+def test_remesh_does_not_consume_future_events():
+    # A second loss scheduled for later must survive an earlier remesh.
+    sch = FaultSchedule(
+        (
+            FaultEvent("device_loss", at=0, n_batches=None, shard=0),
+            FaultEvent("device_loss", at=10, n_batches=None, shard=1),
+        )
+    )
+    inj = FaultInjector(sch)
+    inj.begin_batch()
+    with pytest.raises(DeviceLostError):
+        inj.on_dispatch(n_shards=4)
+    inj.on_dispatch(n_shards=3)  # remesh observed: first event consumed
+    for _ in range(9):
+        inj.begin_batch()
+        inj.on_dispatch(n_shards=3)  # batches 1..9: clean
+    inj.begin_batch()  # batch 10: the second loss is still armed
+    with pytest.raises(DeviceLostError) as exc:
+        inj.on_dispatch(n_shards=3)
+    assert exc.value.shard == 1
+
+
+def test_shed_sentinel_is_typed_constant():
+    # SHED is the count sentinel shed replies carry; spelling it through
+    # the constant (not a literal) is what SEC003/SEC006 police.
+    assert isinstance(SHED, int) and SHED < 0
+
+
+# ----------------------------------------------------------------------
+# The hook inside the real engine dispatch (no monkeypatching)
+# ----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def svc(small_seclud):
+    from repro.serve.search_service import SearchService
+
+    return SearchService(small_seclud)
+
+
+def test_hook_is_inert_on_single_device_engine(svc, small_log):
+    cq = small_log.as_conjunctive()[:24]
+    base, _ = svc.serve_counts_device(cq)
+    svc.install_faults(FaultInjector(FaultSchedule()))  # empty schedule
+    hooked, _ = svc.serve_counts_device(cq)
+    svc.install_faults(None)
+    np.testing.assert_array_equal(base, hooked)
+
+
+def test_hook_raises_inside_sharded_dispatch(small_seclud, small_log):
+    from repro.serve.search_service import SearchService
+
+    svc = SearchService(small_seclud)
+    svc.enable_sharded(n_shards=4)
+    cq = small_log.as_conjunctive()[:24]
+    inj = svc.install_faults(FaultInjector(FaultSchedule.flaky(at=0)))
+    inj.begin_batch()
+    with pytest.raises(InjectedFault):
+        svc.serve_counts_device(cq)
+    # the second attempt of the same batch passes, counts exact
+    counts, info = svc.serve_counts_device(cq)
+    svc.install_faults(None)
+    host, _ = svc.serve_counts(cq)
+    np.testing.assert_array_equal(counts, host)
+    assert len(info["shard_times"]) == 4
+
+
+def test_hook_perturbs_reported_shard_times(small_seclud, small_log):
+    from repro.serve.search_service import SearchService
+
+    svc = SearchService(small_seclud)
+    svc.enable_sharded(n_shards=4, strikes_to_evict=10_000)  # never evict
+    cq = small_log.as_conjunctive()[:24]
+    _, clean_info = svc.serve_counts_device(cq)
+    inj = FaultInjector(FaultSchedule.shard_slowdown(2, at=0, factor=100.0))
+    svc.install_faults(inj)
+    inj.begin_batch()
+    counts, info = svc.serve_counts_device(cq)
+    svc.install_faults(None)
+    times = np.asarray(info["shard_times"])
+    clean = np.asarray(clean_info["shard_times"])
+    # the collective reports uniform honest times; the fault hook is the
+    # only source of asymmetry — shard 2 now reads 100x its peers
+    assert np.ptp(clean) == pytest.approx(0.0)
+    assert times[2] == pytest.approx(100.0 * times[0])
+    host, _ = svc.serve_counts(cq)
+    np.testing.assert_array_equal(counts, host)  # timing lies, counts don't

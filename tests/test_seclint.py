@@ -150,6 +150,79 @@ async def handle(batch):
     assert lint_source(src, "pkg/serve/loop.py") == []
 
 
+def test_sec006_resilience_fixture():
+    src = (FIXTURES / "serve" / "resilience.py").read_text()
+    f = lint_source(src, "pkg/serve/resilience.py")
+    sec6 = [x for x in f if x.rule == "SEC006"]
+    assert len(sec6) == 3  # bare except, swallow, unbounded while True
+    msgs = " ".join(x.message for x in sec6)
+    assert "bare `except:`" in msgs
+    assert "swallows" in msgs
+    assert "unbounded" in msgs
+    # the fixture must trip *only* SEC006 — its sins are pure
+    assert {x.rule for x in f} == {"SEC006"}
+
+
+def test_sec006_scoped_to_fault_path_modules():
+    # Identical code outside serve/ and dist/ is not the resilience
+    # layer's business (a data loader may reasonably best-effort skip).
+    src = (FIXTURES / "serve" / "resilience.py").read_text()
+    assert lint_source(src, "pkg/data/loader.py") == []
+    # but dist/ is in scope alongside serve/
+    assert any(
+        x.rule == "SEC006"
+        for x in lint_source(src, "pkg/dist/fault_tolerance.py")
+    )
+
+
+def test_sec006_bounded_handling_is_exempt():
+    # The sanctioned shapes: a bounded for-retry that re-raises on
+    # exhaustion, an except that *records* the failure, a while True
+    # with a reachable exit.  None of these defeat the ladder.
+    src = """\
+def bounded_retry(engine, batch, budget):
+    last = None
+    for attempt in range(budget):
+        try:
+            return engine(batch)
+        except Exception as err:
+            last = err
+    raise last
+
+
+def serve_loop(queue):
+    while True:
+        item = queue.get()
+        if item is None:
+            break
+        handle(item)
+
+
+def pump(step):
+    while True:
+        try:
+            step()
+        except Exception as err:
+            raise RuntimeError("step failed") from err  # raise is an exit
+"""
+    assert lint_source(src, "pkg/serve/loop.py") == []
+
+
+def test_sec006_nested_loop_break_does_not_exempt():
+    # A break belonging to an inner for-loop never exits the outer
+    # while True — the spin is still unbounded.
+    src = """\
+def drain(shards):
+    while True:
+        for s in shards:
+            if s.empty():
+                break
+            s.pump()
+"""
+    f = lint_source(src, "pkg/serve/loop.py")
+    assert [x.rule for x in f] == ["SEC006"]
+
+
 def test_sec004_kernel_contract():
     f = check_kernel_contracts(FIXTURES / "kernels", tests_dir=None)
     assert {x.rule for x in f} == {"SEC004"}
